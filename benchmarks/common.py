@@ -1,0 +1,88 @@
+"""Shared benchmark infrastructure: seed-averaged policy runs + reporting."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import Request, evaluate, make_policy, schedule_window
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "benchmarks"
+
+POLICIES = ["MaxAcc-EDF", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"]
+
+
+def fresh(reqs):
+    return [
+        Request(r.rid, r.app, r.arrival_s, r.deadline_s, r.features, r.true_label)
+        for r in reqs
+    ]
+
+
+def run_policy_window(policy_name, reqs, apps, sneaks, now=0.1, overrides=None,
+                      short_circuit=None):
+    """One window under one policy; returns metrics dict."""
+    pol = make_policy(policy_name, **(overrides or {}))
+    sc = policy_name == "SneakPeek" if short_circuit is None else short_circuit
+    use_sp = pol.data_aware or sc
+    t0 = time.perf_counter()
+    sched, eff_apps = schedule_window(
+        pol, reqs, apps, now, sneakpeeks=sneaks if use_sp else None, short_circuit=sc
+    )
+    overhead = time.perf_counter() - t0
+    res = evaluate(sched, eff_apps, now, acc_mode="oracle")
+    return {
+        "utility": res.mean_utility,
+        "accuracy": float(res.accuracies.mean()),
+        "violations": res.violations,
+        "violation_time_s": res.violation_time_s,
+        "overhead_s": overhead,
+    }
+
+
+def averaged(policy_names, seeds, make_window, apps=None, sneaks=None, **kw):
+    """Run each policy over seeds; returns {policy: {metric: mean}}.
+
+    ``make_window(seed) -> (reqs, apps, sneaks)`` builds one window.
+    """
+    out = {}
+    for name in policy_names:
+        accum = {}
+        for seed in seeds:
+            reqs, apps_s, sneaks_s = make_window(seed)
+            m = run_policy_window(name, fresh(reqs), apps_s, sneaks_s, **kw)
+            for k, v in m.items():
+                accum.setdefault(k, []).append(v)
+        out[name] = {k: float(np.mean(v)) for k, v in accum.items()}
+    return out
+
+
+def default_window(seed, per_app=4, mean_deadline_s=0.15, deadline_std_s=0.0,
+                   penalty="sigmoid", prior="uninformative", k=5, apps_list=None):
+    apps, sneaks = build_benchmark_suite(penalty=penalty, prior=prior, k=k,
+                                         seed=0, backend="numpy", apps=apps_list)
+    reqs = make_requests(
+        [APP_SPECS[n] for n in (apps_list or APP_SPECS)], per_app=per_app,
+        mean_deadline_s=mean_deadline_s, deadline_std_s=deadline_std_s, seed=seed,
+    )
+    return reqs, apps, sneaks
+
+
+def save_result(name: str, payload: dict):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(json.dumps(payload, indent=2, default=float))
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]):
+    print(f"\n== {title} ==")
+    header = " | ".join(f"{c:>14s}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for row in rows:
+        print(" | ".join(
+            f"{row.get(c, ''):>14.4f}" if isinstance(row.get(c), float) else f"{str(row.get(c, '')):>14s}"
+            for c in cols
+        ))

@@ -1,0 +1,392 @@
+"""Paper-figure benchmarks (Figs. 5-15): one function per figure.
+
+Each returns a JSON-serializable payload and prints a table; run via
+``python -m benchmarks.run``.  Seeds-averaged over windows of the
+synthetic three-application testbed (DESIGN.md §2 surrogates).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    POLICIES,
+    averaged,
+    default_window,
+    fresh,
+    print_table,
+    run_policy_window,
+    save_result,
+)
+from repro.core import (
+    ConfusionSneakPeek,
+    ModelProfile,
+    Application,
+    Request,
+    Worker,
+    attach_sneakpeek,
+    evaluate,
+    expected_accuracy,
+    make_policy,
+    multiworker_schedule,
+    schedule_window,
+)
+from repro.data.applications import (
+    APP_SPECS,
+    build_benchmark_suite,
+    make_application,
+    make_requests,
+    make_sneakpeek,
+)
+
+SEEDS = list(range(8))
+
+
+# ------------------------------------------------------------------ fig 5
+
+
+def fig5_scheduling(quick=False):
+    """Utility / accuracy / violations across the five policies."""
+    seeds = SEEDS[:3] if quick else SEEDS
+    res = averaged(POLICIES, seeds, lambda s: default_window(s))
+    rows = [{"policy": p, **m} for p, m in res.items()]
+    print_table("Fig.5 — schedule utility across approaches",
+                rows, ["policy", "utility", "accuracy", "violations", "violation_time_s"])
+    save_result("fig5_scheduling", res)
+    return res
+
+
+# ------------------------------------------------------------------ fig 6
+
+
+def fig6_estimation(quick=False):
+    """Accuracy-estimation error: profiled vs SneakPeek (k=1, k=5)."""
+    n = 80 if quick else 300
+    out = {}
+    for app_name, spec in APP_SPECS.items():
+        app = make_application(spec)
+        reqs = make_requests([spec], per_app=n, seed=3)
+        row = {}
+        for label, k in (("knn_k1", 1), ("knn_k5", 5)):
+            rs = fresh(reqs)
+            sp = make_sneakpeek(spec, k=k, backend="numpy")
+            attach_sneakpeek(rs, {app_name: app}, {app_name: sp})
+            row[label] = float(np.mean([
+                abs(expected_accuracy(m.recalls, r.theta) - m.recalls[r.true_label])
+                for r in rs for m in app.models
+            ]))
+        row["profiled"] = float(np.mean([
+            abs(m.profiled_accuracy() - m.recalls[r.true_label])
+            for r in reqs for m in app.models
+        ]))
+        out[app_name] = row
+    rows = [{"app": a, **m} for a, m in out.items()]
+    print_table("Fig.6 — accuracy estimation error", rows, ["app", "profiled", "knn_k1", "knn_k5"])
+    save_result("fig6_estimation", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 7
+
+
+def fig7_incremental(quick=False):
+    """Data-awareness (+DA) and short-circuit (+SC) added to each policy."""
+    seeds = SEEDS[:3] if quick else SEEDS
+    variants = {
+        "base": dict(overrides={"data_aware": False, "split_by_label": False}, short_circuit=False),
+        "+DA": dict(overrides={"data_aware": True}, short_circuit=False),
+        "+DA+SC": dict(overrides={"data_aware": True}, short_circuit=True),
+    }
+    out = {}
+    for pol in ("LO-EDF", "LO-Priority", "Grouped"):
+        row = {}
+        for vname, kw in variants.items():
+            vals = []
+            for s in seeds:
+                reqs, apps, sneaks = default_window(s)
+                m = run_policy_window(pol, fresh(reqs), apps, sneaks, **kw)
+                vals.append(m["utility"])
+            row[vname] = float(np.mean(vals))
+        out[pol] = row
+    rows = [{"policy": p, **m} for p, m in out.items()]
+    print_table("Fig.7 — incremental data-awareness", rows, ["policy", "base", "+DA", "+DA+SC"])
+    save_result("fig7_incremental", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 8
+
+
+def fig8_required_accuracy(quick=False):
+    """How accurate must SneakPeek models be to help?"""
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    accs = [0.1, 0.3, 0.5, 0.7, 0.9]
+    out = {}
+    for acc in accs:
+        vals = []
+        for s in seeds:
+            reqs, apps, _ = default_window(s)
+            sneaks = {
+                name: ConfusionSneakPeek(APP_SPECS[name].num_classes, acc, k=5, seed=s)
+                for name in apps
+            }
+            # full SneakPeek policy incl. short-circuit (§VI-A): the
+            # proxy's OWN answers are what make accurate SneakPeek models
+            # valuable under tight deadlines (paper Fig. 8).
+            m = run_policy_window("SneakPeek", fresh(reqs), apps, sneaks, short_circuit=True)
+            vals.append(m["utility"])
+        out[f"{acc:.1f}"] = float(np.mean(vals))
+    # data-oblivious grouped reference
+    vals = []
+    for s in seeds:
+        reqs, apps, _ = default_window(s)
+        m = run_policy_window("Grouped", fresh(reqs), apps, None)
+        vals.append(m["utility"])
+    out["grouped_ref"] = float(np.mean(vals))
+    rows = [{"sneakpeek_acc": k, "utility": v} for k, v in out.items()]
+    print_table("Fig.8 — required SneakPeek accuracy", rows, ["sneakpeek_acc", "utility"])
+    save_result("fig8_required_accuracy", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 9
+
+
+def fig9_priors(quick=False):
+    """Prior choice x (prior matches true stream) vs (prior matches test set)."""
+    n = 80 if quick else 250
+    out = {}
+    for regime, priors in (
+        ("true_dist", ["uninformative", "weak", "strong"]),
+        ("test_dist", ["uninformative", "weak_test", "strong_test"]),
+    ):
+        for prior in priors:
+            errs = []
+            for app_name, spec in APP_SPECS.items():
+                app = make_application(spec, prior=prior)
+                reqs = make_requests([spec], per_app=n, seed=5)
+                sp = make_sneakpeek(spec, k=5, backend="numpy")
+                attach_sneakpeek(reqs, {app_name: app}, {app_name: sp})
+                errs.extend(
+                    abs(expected_accuracy(m.recalls, r.theta) - m.recalls[r.true_label])
+                    for r in reqs for m in app.models
+                )
+            out[f"{regime}/{prior}"] = float(np.mean(errs))
+    rows = [{"config": k, "est_error": v} for k, v in out.items()]
+    print_table("Fig.9 — prior choice vs estimation error", rows, ["config", "est_error"])
+    save_result("fig9_priors", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 10
+
+
+def fig10_deadlines(quick=False):
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    out = {"mean_sweep": {}, "variance_sweep": {}}
+    for dl in (0.05, 0.1, 0.15, 0.2, 0.3, 0.5):
+        res = averaged(["LO-EDF", "LO-Priority", "Grouped", "SneakPeek"], seeds,
+                       lambda s, dl=dl: default_window(s, mean_deadline_s=dl))
+        out["mean_sweep"][f"{int(dl*1000)}ms"] = {p: m["utility"] for p, m in res.items()}
+    for std in (0.0, 0.02, 0.05, 0.1):
+        res = averaged(["LO-EDF", "LO-Priority", "Grouped", "SneakPeek"], seeds,
+                       lambda s, std=std: default_window(s, deadline_std_s=std))
+        out["variance_sweep"][f"std{int(std*1000)}ms"] = {p: m["utility"] for p, m in res.items()}
+    rows = [{"deadline": k, **v} for k, v in out["mean_sweep"].items()]
+    print_table("Fig.10a — deadline sweep (utility)", rows,
+                ["deadline", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    rows = [{"dl_std": k, **v} for k, v in out["variance_sweep"].items()]
+    print_table("Fig.10b — deadline variance sweep", rows,
+                ["dl_std", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    save_result("fig10_deadlines", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 11
+
+
+def _cloned_apps(n_apps, penalty="sigmoid", seed=0):
+    """1..6 applications by cloning the three specs with shifted seeds."""
+    base = list(APP_SPECS.values())
+    apps, sneaks, specs = {}, {}, []
+    for i in range(n_apps):
+        spec = base[i % 3]
+        name = spec.name if i < 3 else f"{spec.name}#{i // 3}"
+        import dataclasses
+
+        spec_i = dataclasses.replace(spec, name=name)
+        apps[name] = make_application(spec_i, penalty=penalty, seed=seed + i * 37)
+        sneaks[name] = make_sneakpeek(spec_i, k=5, seed=seed + i, backend="numpy")
+        specs.append(spec_i)
+    return apps, sneaks, specs
+
+
+def fig11_applications(quick=False):
+    """Fixed 24 requests; 1..6 applications; utility + scheduling overhead."""
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    out = {}
+    for n_apps in (1, 2, 3, 4, 6):
+        per_app = 24 // n_apps
+        res = {}
+        for pol in ("LO-EDF", "LO-Priority", "Grouped", "SneakPeek"):
+            vals, ovh = [], []
+            for s in seeds:
+                apps, sneaks, specs = _cloned_apps(n_apps, seed=s)
+                reqs = make_requests(specs, per_app=per_app, mean_deadline_s=0.2, seed=s)
+                m = run_policy_window(pol, fresh(reqs), apps, sneaks)
+                vals.append(m["utility"])
+                ovh.append(m["overhead_s"])
+            res[pol] = {"utility": float(np.mean(vals)), "overhead_ms": float(np.mean(ovh) * 1e3)}
+        out[str(n_apps)] = res
+    rows = [
+        {"n_apps": k, **{p: v[p]["utility"] for p in v}} for k, v in out.items()
+    ]
+    print_table("Fig.11a — #applications vs utility", rows,
+                ["n_apps", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    rows = [
+        {"n_apps": k, **{p: v[p]["overhead_ms"] for p in v}} for k, v in out.items()
+    ]
+    print_table("Fig.11b — scheduling overhead (ms)", rows,
+                ["n_apps", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    save_result("fig11_applications", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 12
+
+
+def fig12_arrival(quick=False):
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    out = {}
+    for per_app in (2, 4, 8, 12, 16):
+        n = per_app * 3
+        res = {}
+        for pol in ("LO-EDF", "LO-Priority", "Grouped", "SneakPeek"):
+            vals, ovh = [], []
+            for s in seeds:
+                reqs, apps, sneaks = default_window(s, per_app=per_app, mean_deadline_s=0.2)
+                m = run_policy_window(pol, fresh(reqs), apps, sneaks)
+                vals.append(m["utility"])
+                ovh.append(m["overhead_s"])
+            res[pol] = {"utility": float(np.mean(vals)), "overhead_ms": float(np.mean(ovh) * 1e3)}
+        out[str(n)] = res
+    rows = [{"n_requests": k, **{p: v[p]["utility"] for p in v}} for k, v in out.items()]
+    print_table("Fig.12a — arrival rate vs utility", rows,
+                ["n_requests", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    rows = [{"n_requests": k, **{p: v[p]["overhead_ms"] for p in v}} for k, v in out.items()]
+    print_table("Fig.12b — scheduling overhead (ms)", rows,
+                ["n_requests", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    save_result("fig12_arrival", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 13
+
+
+def fig13_penalty(quick=False):
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    out = {}
+    for penalty in ("step", "sigmoid"):
+        sweep = {}
+        for dl in (0.05, 0.1, 0.2, 0.4):
+            res = averaged(["LO-EDF", "LO-Priority", "Grouped", "SneakPeek"], seeds,
+                           lambda s, dl=dl, p=penalty: default_window(s, mean_deadline_s=dl, penalty=p))
+            sweep[f"{int(dl*1000)}ms"] = {p: m["utility"] for p, m in res.items()}
+        out[penalty] = sweep
+        rows = [{"deadline": k, **v} for k, v in sweep.items()]
+        print_table(f"Fig.13 — {penalty} penalty", rows,
+                    ["deadline", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"])
+    save_result("fig13_penalty", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 14
+
+
+def _heterogeneity_apps(var_pct: float, seed=0):
+    """Three synthetic variants per app: mean +/- var_pct% accuracy & latency."""
+    apps = {}
+    for name, spec in APP_SPECS.items():
+        base = make_application(spec, seed=seed)
+        mean_acc = float(np.mean([m.profiled_accuracy() for m in base.models]))
+        mean_lat = float(np.mean([m.latency_s for m in base.models]))
+        mean_load = float(np.mean([m.load_latency_s for m in base.models]))
+        d = var_pct / 100.0
+        models = []
+        for i, f in enumerate((-d, 0.0, d)):
+            acc = np.clip(mean_acc * (1 + f), 0.02, 0.98)
+            models.append(ModelProfile(
+                name=f"{name}-v{i}",
+                recalls=np.full(spec.num_classes, acc),
+                latency_s=max(1e-4, mean_lat * (1 + f)),
+                load_latency_s=mean_load,
+                latency_model=(0.6 * mean_lat * (1 + f), 0.4 * mean_lat * (1 + f)),
+            ))
+        apps[name] = Application(name=name, models=models, penalty="sigmoid")
+    return apps
+
+
+def fig14_heterogeneity(quick=False):
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    out = {}
+    for var in (1, 5, 10, 20, 40):
+        res = {}
+        for pol in ("LO-EDF", "LO-Priority", "Grouped"):
+            vals = []
+            for s in seeds:
+                apps = _heterogeneity_apps(var, seed=s)
+                reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=s)
+                m = run_policy_window(pol, fresh(reqs), apps, None)
+                vals.append(m["utility"])
+            res[pol] = float(np.mean(vals))
+        out[f"{var}%"] = res
+    rows = [{"variance": k, **v} for k, v in out.items()]
+    print_table("Fig.14 — model heterogeneity", rows, ["variance", "LO-EDF", "LO-Priority", "Grouped"])
+    save_result("fig14_heterogeneity", out)
+    return out
+
+
+# ------------------------------------------------------------------ fig 15
+
+
+def fig15_multiworker(quick=False):
+    seeds = SEEDS[:2] if quick else SEEDS[:5]
+    out = {"two_workers": {}, "worker_sweep": {}}
+    for dl in (0.05, 0.1, 0.15, 0.25):
+        res = {}
+        for grouped, da, label in ((False, False, "LO"), (True, False, "Grouped"), (True, True, "SneakPeek")):
+            vals = []
+            for s in seeds:
+                reqs, apps, sneaks = default_window(s, per_app=6, mean_deadline_s=dl)
+                rs = fresh(reqs)
+                if da:
+                    attach_sneakpeek(rs, apps, sneaks)
+                if grouped:
+                    sched = multiworker_schedule(rs, apps, [Worker(0), Worker(1)], 0.1,
+                                                 data_aware=da, split_by_label=da)
+                else:
+                    sched = multiworker_schedule(rs, apps, [Worker(0), Worker(1)], 0.1,
+                                                 per_request=True)
+                vals.append(evaluate(sched, apps, 0.1, acc_mode="oracle").mean_utility)
+            res[label] = float(np.mean(vals))
+        out["two_workers"][f"{int(dl*1000)}ms"] = res
+    for n_workers in (1, 2, 3, 4):
+        vals_g, vals_sp = [], []
+        for s in seeds:
+            reqs, apps, sneaks = default_window(s, per_app=6, mean_deadline_s=0.15)
+            workers = [Worker(i) for i in range(n_workers)]
+            rs = fresh(reqs)
+            sched = multiworker_schedule(rs, apps, workers, 0.1)
+            vals_g.append(evaluate(sched, apps, 0.1, acc_mode="oracle").mean_utility)
+            rs = fresh(reqs)
+            attach_sneakpeek(rs, apps, sneaks)
+            sched = multiworker_schedule(rs, apps, workers, 0.1, data_aware=True, split_by_label=True)
+            vals_sp.append(evaluate(sched, apps, 0.1, acc_mode="oracle").mean_utility)
+        out["worker_sweep"][str(n_workers)] = {
+            "Grouped": float(np.mean(vals_g)), "SneakPeek": float(np.mean(vals_sp))
+        }
+    rows = [{"deadline": k, **v} for k, v in out["two_workers"].items()]
+    print_table("Fig.15a — two workers", rows, ["deadline", "LO", "Grouped", "SneakPeek"])
+    rows = [{"workers": k, **v} for k, v in out["worker_sweep"].items()]
+    print_table("Fig.15b — worker count", rows, ["workers", "Grouped", "SneakPeek"])
+    save_result("fig15_multiworker", out)
+    return out

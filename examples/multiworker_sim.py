@@ -1,0 +1,42 @@
+"""Multi-worker scheduling (paper §VII): heterogeneous workers, greedy
+grouped placement, and the diminishing-returns curve of adding workers.
+
+    PYTHONPATH=src python examples/multiworker_sim.py
+"""
+import numpy as np
+
+from repro.core import Request, Worker, evaluate, multiworker_schedule
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+
+def fresh(reqs):
+    return [Request(r.rid, r.app, r.arrival_s, r.deadline_s, r.features, r.true_label)
+            for r in reqs]
+
+
+def main():
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=6, mean_deadline_s=0.12, seed=0)
+
+    print("workers -> mean utility (grouped multiworker scheduling)")
+    for n in (1, 2, 3, 4):
+        workers = [Worker(i) for i in range(n)]
+        sched = multiworker_schedule(fresh(reqs), apps, workers, now=0.1)
+        res = evaluate(sched, apps, 0.1, acc_mode="oracle")
+        by_worker = {}
+        for e in sched.entries:
+            by_worker[e.worker] = by_worker.get(e.worker, 0) + 1
+        print(f"  {n}: utility={res.mean_utility:.3f} violations={res.violations:2d} "
+              f"load={dict(sorted(by_worker.items()))}")
+
+    print("\nheterogeneous pool: worker1 is 4x faster")
+    workers = [Worker(0, speed=1.0), Worker(1, speed=4.0)]
+    sched = multiworker_schedule(fresh(reqs), apps, workers, now=0.1)
+    res = evaluate(sched, apps, 0.1, acc_mode="oracle")
+    fast = sum(1 for e in sched.entries if e.worker == 1)
+    print(f"  utility={res.mean_utility:.3f}; {fast}/{len(sched.entries)} requests "
+          f"placed on the fast worker")
+
+
+if __name__ == "__main__":
+    main()

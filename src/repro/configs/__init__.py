@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig
+from repro.configs.registry import ALIASES, ARCHS, get_config
+from repro.configs.shapes import SHAPES, ShapeSpec, cell_supported
+
+__all__ = ["ModelConfig", "ARCHS", "ALIASES", "get_config", "SHAPES", "ShapeSpec", "cell_supported"]

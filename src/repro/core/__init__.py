@@ -1,0 +1,48 @@
+"""SneakPeek core: data-aware model selection and scheduling (the paper's contribution)."""
+from repro.core.accuracy import (
+    ModelProfile,
+    accuracy_from_confusion,
+    confusion_with_accuracy,
+    expected_accuracy,
+    recalls_from_confusion,
+)
+from repro.core.dirichlet import (
+    DirichletPrior,
+    jeffreys_prior,
+    posterior,
+    posterior_mean,
+    strongly_informative_prior,
+    weakly_informative_prior,
+)
+from repro.core.evaluation import EvalResult, WorkerTimeline, evaluate
+from repro.core.grouping import grouped_schedule, group_by_app, split_groups_by_label
+from repro.core.multiworker import Worker, multiworker_schedule
+from repro.core.priority import group_priority, request_priority
+from repro.core.scheduler import POLICY_NAMES, SchedulerPolicy, make_policy, schedule_window
+from repro.core.simulator import Simulation, WindowResult, run_window
+from repro.core.sneakpeek import (
+    ConfusionSneakPeek,
+    DecisionRuleSneakPeek,
+    KNNSneakPeek,
+    SneakPeekModel,
+    attach_sneakpeek,
+)
+from repro.core.types import Application, Request, Schedule, ScheduleEntry
+from repro.core.utility import PENALTIES, utility
+
+__all__ = [
+    "ModelProfile", "accuracy_from_confusion", "confusion_with_accuracy",
+    "expected_accuracy", "recalls_from_confusion",
+    "DirichletPrior", "jeffreys_prior", "posterior", "posterior_mean",
+    "strongly_informative_prior", "weakly_informative_prior",
+    "EvalResult", "WorkerTimeline", "evaluate",
+    "grouped_schedule", "group_by_app", "split_groups_by_label",
+    "Worker", "multiworker_schedule",
+    "group_priority", "request_priority",
+    "POLICY_NAMES", "SchedulerPolicy", "make_policy", "schedule_window",
+    "Simulation", "WindowResult", "run_window",
+    "ConfusionSneakPeek", "DecisionRuleSneakPeek", "KNNSneakPeek",
+    "SneakPeekModel", "attach_sneakpeek",
+    "Application", "Request", "Schedule", "ScheduleEntry",
+    "PENALTIES", "utility",
+]

@@ -1,0 +1,121 @@
+"""Multi-worker scheduling (paper §VII, Eq. 15).
+
+The schedule gains a worker index k; each variant is profiled per worker
+(heterogeneous workers => per-(model, worker) latency scaling).  The
+grouped policy generalizes greedily: groups in priority order, each
+placed on the (worker, model) pair maximizing the group's average
+utility given that worker's current timeline — naturally balancing load
+because a busy worker's later start times depress utility.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.accuracy import ModelProfile
+from repro.core.evaluation import WorkerTimeline, estimate_accuracy
+from repro.core.grouping import group_by_app, split_groups_by_label
+from repro.core.priority import group_priority, request_priority
+from repro.core.types import Application, Request, Schedule, ScheduleEntry
+from repro.core.utility import utility as eq2_utility
+
+__all__ = ["Worker", "multiworker_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Worker:
+    """A worker with a relative speed (latency scale) — heterogeneous pools.
+
+    ``speed=2.0`` halves every inference latency on that worker; swap
+    latency scales with ``load_scale`` (e.g. shared host-to-device links).
+    """
+
+    wid: int
+    speed: float = 1.0
+    load_scale: float = 1.0
+
+    def scaled(self, profile: ModelProfile) -> ModelProfile:
+        if self.speed == 1.0 and self.load_scale == 1.0:
+            return profile
+        lm = profile.latency_model
+        return dataclasses.replace(
+            profile,
+            latency_s=profile.latency_s / self.speed,
+            load_latency_s=profile.load_latency_s * self.load_scale,
+            latency_model=None if lm is None else (lm[0] / self.speed, lm[1] / self.speed),
+        )
+
+
+def multiworker_schedule(
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    workers: Sequence[Worker],
+    now: float,
+    data_aware: bool = False,
+    split_by_label: bool = False,
+    per_request: bool = False,
+) -> Schedule:
+    """Greedy grouped scheduling over heterogeneous workers (Eq. 15).
+
+    ``per_request=True`` degrades grouping to singletons — the
+    locally-optimal multi-worker baseline of Fig. 15."""
+    if not requests:
+        return Schedule()
+    acc_mode = "sharpened" if data_aware else "profiled"
+    if per_request:
+        groups = {f"r{r.rid}": [r] for r in requests}
+    else:
+        groups = group_by_app(requests)
+        if split_by_label:
+            groups = split_groups_by_label(groups, apps)
+
+    def gp(item):
+        key, members = item
+        return (-group_priority(members, apps[members[0].app], now, data_aware), key)
+
+    ordered_groups = sorted(groups.items(), key=gp)
+    timelines = {w.wid: WorkerTimeline(now) for w in workers}
+    orders = {w.wid: 1 for w in workers}
+    entries: list[ScheduleEntry] = []
+
+    for batch_id, (key, members) in enumerate(ordered_groups):
+        app = apps[members[0].app]
+        best = None  # (utility, -latency, worker, scaled_profile)
+        for w in workers:
+            tl = timelines[w.wid]
+            for m in app.models:
+                sm = w.scaled(m)
+                start, completion = tl.peek_batch(sm, len(members))
+                lat = completion - start
+                total = 0.0
+                for r in members:
+                    acc = estimate_accuracy(r, app, m, acc_mode)
+                    total += eq2_utility(acc, r.deadline_s, start, lat, app.penalty_fn)
+                u = total / len(members)
+                cand = (u, -lat, -w.wid, m.name)
+                if best is None or cand > best[0]:
+                    best = (cand, w, sm)
+        _, w, sm = best
+        tl = timelines[w.wid]
+        start, completion = tl.run_batch(sm, len(members))
+        ordered_members = sorted(
+            members, key=lambda r: (-request_priority(r, app, now, data_aware), r.rid)
+        )
+        for r in ordered_members:
+            entries.append(
+                ScheduleEntry(
+                    request=r,
+                    model=sm.name,
+                    order=orders[w.wid],
+                    worker=w.wid,
+                    batch_id=batch_id,
+                    est_start_s=start,
+                    est_latency_s=completion - start,
+                )
+            )
+            orders[w.wid] += 1
+    sched = Schedule(entries=entries)
+    sched.validate()
+    return sched

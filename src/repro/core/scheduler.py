@@ -1,0 +1,151 @@
+"""Policy composition: the five evaluated schedulers (paper §VI-A).
+
+  * MaxAcc-EDF   — max-accuracy selection + EDF ordering.
+  * LO-EDF       — locally-optimal (Eq. 13) selection + EDF ordering.
+  * LO-Priority  — locally-optimal selection + priority (Eq. 12) ordering.
+  * Grouped      — Algorithm 1 (group by app, batch, group-level Eq. 13).
+  * SneakPeek    — Grouped + data-awareness (sharpened accuracies,
+                   label-split subgroups) + short-circuit inference.
+
+Every policy returns a ``Schedule``; data-awareness is orthogonal and can
+be layered on any of them (``data_aware=True``) exactly as the paper's
+Fig. 7 incremental study requires.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Mapping, Sequence
+
+from repro.core.evaluation import WorkerTimeline
+from repro.core.grouping import grouped_schedule
+from repro.core.ordering import ORDERINGS
+from repro.core.selection import locally_optimal, max_accuracy
+from repro.core.types import Application, Request, Schedule, ScheduleEntry
+
+__all__ = ["SchedulerPolicy", "make_policy", "POLICY_NAMES", "schedule_window"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """A (ordering, selection, grouping, data-awareness) combination."""
+
+    name: str
+    ordering: str = "edf"  # fcfs | edf | priority
+    selection: str = "locally_optimal"  # locally_optimal | max_accuracy
+    grouped: bool = False
+    data_aware: bool = False
+    split_by_label: bool = False
+    tau: int = 3  # brute-force threshold for grouped scheduling
+
+    def schedule(
+        self,
+        requests: Sequence[Request],
+        apps: Mapping[str, Application],
+        now: float,
+    ) -> Schedule:
+        t0 = time.perf_counter()
+        if self.grouped:
+            sched = grouped_schedule(
+                requests,
+                apps,
+                now,
+                tau=self.tau,
+                data_aware=self.data_aware,
+                split_by_label=self.split_by_label,
+            )
+        else:
+            sched = self._per_request_schedule(requests, apps, now)
+        sched.scheduling_overhead_s = time.perf_counter() - t0
+        return sched
+
+    def _per_request_schedule(
+        self,
+        requests: Sequence[Request],
+        apps: Mapping[str, Application],
+        now: float,
+    ) -> Schedule:
+        acc_mode = "sharpened" if self.data_aware else "profiled"
+        order_fn = ORDERINGS[self.ordering]
+        select_fn = {
+            "locally_optimal": locally_optimal,
+            "max_accuracy": max_accuracy,
+        }[self.selection]
+        ordered = order_fn(requests, apps, now, data_aware=self.data_aware)
+        tl = WorkerTimeline(now)
+        entries = []
+        for k, r in enumerate(ordered):
+            app = apps[r.app]
+            profile = select_fn(r, app, tl, acc_mode=acc_mode)
+            start, completion = tl.run_batch(profile, 1)
+            entries.append(
+                ScheduleEntry(
+                    request=r,
+                    model=profile.name,
+                    order=k + 1,
+                    batch_id=-1,
+                    est_start_s=start,
+                    est_latency_s=completion - start,
+                )
+            )
+        sched = Schedule(entries=entries)
+        sched.validate()
+        return sched
+
+
+_POLICIES: dict[str, SchedulerPolicy] = {
+    "MaxAcc-EDF": SchedulerPolicy("MaxAcc-EDF", ordering="edf", selection="max_accuracy"),
+    "LO-EDF": SchedulerPolicy("LO-EDF", ordering="edf", selection="locally_optimal"),
+    "LO-Priority": SchedulerPolicy(
+        "LO-Priority", ordering="priority", selection="locally_optimal"
+    ),
+    "Grouped": SchedulerPolicy("Grouped", grouped=True),
+    "SneakPeek": SchedulerPolicy(
+        "SneakPeek", grouped=True, data_aware=True, split_by_label=True
+    ),
+}
+POLICY_NAMES = list(_POLICIES)
+
+
+def make_policy(name: str, **overrides) -> SchedulerPolicy:
+    """Look up one of the paper's five policies, optionally overridden
+    (e.g. ``make_policy("LO-EDF", data_aware=True)`` for Fig. 7)."""
+    base = _POLICIES[name]
+    if not overrides:
+        return base
+    return dataclasses.replace(base, **overrides)
+
+
+def schedule_window(
+    policy: SchedulerPolicy,
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    now: float,
+    sneakpeeks=None,
+    short_circuit: bool = False,
+) -> tuple[Schedule, Mapping[str, Application]]:
+    """One scheduling-window pass: SneakPeek stage (if any) then the policy.
+
+    With ``short_circuit`` the SneakPeek profiles are appended to each
+    application's variant list (zero latency, profiled accuracy) so the
+    policy can choose them like any other model (§V-C1).  Returns the
+    schedule and the (possibly augmented) application map.
+    """
+    from repro.core.sneakpeek import attach_sneakpeek
+
+    if sneakpeeks:
+        attach_sneakpeek(requests, apps, sneakpeeks)
+    eff_apps = apps
+    if short_circuit and sneakpeeks:
+        eff_apps = {}
+        for name, app in apps.items():
+            sp = sneakpeeks.get(name)
+            if sp is None:
+                eff_apps[name] = app
+                continue
+            prof = sp.profile()
+            if any(m.name == prof.name for m in app.models):
+                eff_apps[name] = app
+            else:
+                eff_apps[name] = dataclasses.replace(app, models=app.models + [prof])
+    return policy.schedule(requests, eff_apps, now), eff_apps

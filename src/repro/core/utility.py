@@ -1,0 +1,102 @@
+"""Request utility and deadline-penalty functions (paper Eq. 2, §VI-A).
+
+    u_a(m, d, t) = Accuracy(m) * [1 - gamma_a(d, t + l(m))]        (Eq. 2)
+
+gamma_a(d, e) >= 0 is a monotonically increasing penalty, positive when
+the expected completion time e exceeds the deadline d.  The paper
+evaluates three penalties (§VI-A):
+
+  * step:    gamma = 1[d < e]
+  * linear:  gamma = 1[d < e] * min(1, (e - d) / d)
+  * sigmoid: a smooth ramp in the overshoot ratio.
+
+Note on the paper's formulas: the text writes ``max(1, (e-d)/d)`` which
+is 1 whenever a deadline is missed even slightly — that would be
+identical to the step penalty, and Fig. 13 shows linear/sigmoid clearly
+differ from step.  We therefore read it as the intended ``min`` (a ramp
+capped at full penalty), the standard soft-SLO form; same for the
+sigmoid's cap.  This interpretation is recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+
+__all__ = [
+    "step_penalty",
+    "linear_penalty",
+    "sigmoid_penalty",
+    "PENALTIES",
+    "utility",
+]
+
+PenaltyFn = Callable[[float, float], float]
+
+
+def step_penalty(deadline: float, completion: float) -> float:
+    """gamma(d, e) = 1[d < e] — utility zero on any miss."""
+    return 1.0 if deadline < completion else 0.0
+
+
+def linear_penalty(deadline: float, completion: float) -> float:
+    """Ramp penalty: overshoot fraction of the deadline, capped at 1."""
+    if completion <= deadline:
+        return 0.0
+    if deadline <= 0:
+        return 1.0
+    return min(1.0, (completion - deadline) / deadline)
+
+
+def sigmoid_penalty(deadline: float, completion: float) -> float:
+    """Smooth sigmoid ramp in the overshoot ratio (paper §VI-A).
+
+    Paper form: gamma = 1[d<e] * cap( 1 / (1 + (x/(1-x))^{-3}) ) with
+    x = 1 - (2d - e)/d = (e - d)/d (the overshoot ratio).  The inner
+    expression is the standard "smoothstep-like" rational sigmoid on
+    x in (0, 1); for x >= 1 (completion at >= 2x the deadline) the
+    penalty saturates at 1.
+    """
+    if completion <= deadline:
+        return 0.0
+    if deadline <= 0:
+        return 1.0
+    x = (completion - deadline) / deadline
+    if x >= 1.0:
+        return 1.0
+    if x <= 0.0:
+        return 0.0
+    ratio = x / (1.0 - x)
+    return min(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+
+
+PENALTIES: dict[str, PenaltyFn] = {
+    "step": step_penalty,
+    "linear": linear_penalty,
+    "sigmoid": sigmoid_penalty,
+    # A constant-zero penalty turns Eq. 3 into pure accuracy maximization
+    # (paper §III-A remark about high-accuracy applications).
+    "none": lambda d, e: 0.0,
+}
+
+
+def utility(
+    accuracy: float,
+    deadline: float,
+    start_time: float,
+    latency: float,
+    penalty: PenaltyFn,
+) -> float:
+    """Eq. 2: Accuracy(m) * [1 - gamma(d, t + l(m))].
+
+    Args:
+      accuracy: estimated accuracy of the selected model for this request —
+        either profiled (data-oblivious baselines) or SneakPeek-sharpened.
+      deadline: absolute deadline d_i (seconds, same clock as start_time).
+      start_time: expected execution start t_i (Eq. 1).
+      latency: expected execution latency l(m) (including any swap cost).
+      penalty: gamma function.
+    """
+    completion = start_time + latency
+    g = penalty(deadline, completion)
+    return float(accuracy) * (1.0 - min(1.0, max(0.0, g)))

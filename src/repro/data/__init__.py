@@ -1,0 +1,8 @@
+from repro.data.applications import APP_SPECS, AppSpec, build_benchmark_suite, make_application, make_dataset, make_requests, make_sneakpeek
+from repro.data.lm_data import LMDataConfig, LMDataset
+
+__all__ = [
+    "APP_SPECS", "AppSpec", "build_benchmark_suite", "make_application",
+    "make_dataset", "make_requests", "make_sneakpeek",
+    "LMDataConfig", "LMDataset",
+]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash-decode: masked softmax over the cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["decode_attention_ref"]
+
+_NEG = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, window: int = 0, scale=None):
+    """q: (B, Hkv, G, D);  k/v_cache: (B, Hkv, S, D);  lengths: (B,) -> (B, Hkv, G, D)."""
+    b, hkv, g, d = q.shape
+    s = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum("bhgd,bhsd->bhgs", q, k_cache, preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, :]  # (1, S)
+    mask = pos < lengths[:, None]
+    if window > 0:
+        mask &= pos >= lengths[:, None] - window
+    logits = jnp.where(mask[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", p.astype(v_cache.dtype), v_cache).astype(q.dtype)

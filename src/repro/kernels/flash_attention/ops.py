@@ -1,0 +1,28 @@
+"""Jitted public wrapper: model-layout in/out, kernel or oracle backend."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "interpret", "use_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    interpret: bool = True, use_kernel: bool = True):
+    """Model layout: q (B, Sq, Hq, D); k, v (B, Skv, Hkv, D) -> (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qk = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+    kk = k.transpose(0, 2, 1, 3)
+    vk = v.transpose(0, 2, 1, 3)
+    fn = flash_attention_pallas if use_kernel else flash_attention_ref
+    kwargs = {"interpret": interpret} if use_kernel else {}
+    out = fn(qk, kk, vk, causal=causal, window=window, **kwargs)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)

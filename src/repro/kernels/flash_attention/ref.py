@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Reuses the model's chunked-flash implementation (the same function the
+dry-run compiles), reshaped to the kernel's GQA-native layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import flash_attention as _model_flash
+
+__all__ = ["flash_attention_ref"]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0, scale=None):
+    """q: (B, Hkv, G, Sq, D);  k, v: (B, Hkv, Skv, D) -> same layout as kernel."""
+    b, hkv, g, sq, d = q.shape
+    # model layout: q (B, S, Hq, D) with Hq = Hkv * G
+    qm = q.transpose(0, 3, 1, 2, 4).reshape(b, sq, hkv * g, d)
+    km = k.transpose(0, 2, 1, 3)
+    vm = v.transpose(0, 2, 1, 3)
+    if not causal:
+        raise NotImplementedError("oracle is causal-only (matches kernel usage)")
+    out = _model_flash(qm, km, vm, causal=True, window=window, scale=scale,
+                       q_chunk=max(sq // 4, 1), kv_chunk=max(k.shape[2] // 4, 1))
+    return out.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the k-NN evidence kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["knn_ref", "knn_class_votes_ref"]
+
+
+def knn_ref(queries, train_x, train_y, k: int):
+    """Exact top-k by full distance matrix.  Returns (dists (Q,k), labels (Q,k)).
+
+    Distances match the kernel's convention: |x|^2 - 2 q.x (no |q|^2 term)."""
+    import jax
+
+    d2 = (train_x**2).sum(1)[None, :] - 2.0 * queries @ train_x.T
+    neg_d, idx = jax.lax.top_k(-d2, k)
+    return -neg_d, train_y[idx].astype(jnp.float32)
+
+
+def knn_class_votes_ref(queries, train_x, train_y, k: int, num_classes: int):
+    """(Q, num_classes) vote counts — the multinomial evidence y (§IV-B)."""
+    _, labels = knn_ref(queries, train_x, train_y, k)
+    import jax
+
+    return jax.nn.one_hot(labels.astype(jnp.int32), num_classes).sum(axis=1)

@@ -1,0 +1,109 @@
+"""Post-SPMD HLO analysis: collective-bytes census + roofline terms.
+
+``collective_bytes`` parses the compiled (partitioned) HLO text and sums
+the result-shape bytes of every communication op.  Methodology (recorded
+in EXPERIMENTS.md §Roofline):
+
+  * all-gather / all-to-all / collective-permute / all-reduce /
+    reduce-scatter: bytes = result-shape bytes of the op on one device
+    (the per-device traffic approximation; ring-algorithm factors
+    (n-1)/n ~ 1 are ignored).
+  * async pairs (``-start``/``-done``) are counted once (at start);
+    tuple-shaped results sum their components.
+"""
+from __future__ import annotations
+
+import re
+from typing import Iterable
+
+__all__ = ["collective_bytes", "roofline_terms", "HW"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "ragged-all-to-all",
+)
+
+# e.g.  %all-gather.1 = bf16[8,512,128]{2,1,0} all-gather(...)
+#       %ar = (f32[128]{0}, f32[128]{0}) all-reduce-start(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[0-9,]*\][^\s]*)\s+(" + "|".join(_COLLECTIVES) + r")(-start)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """{op_kind: {"count": int, "bytes": int}, "total_bytes": int}."""
+    out: dict = {}
+    total = 0
+    for m in _LINE_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        rec = out.setdefault(kind, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += b
+        total += b
+    out["total_bytes"] = total
+    return out
+
+
+# ------------------------------------------------------------- roofline
+
+# TPU v5e hardware constants (per chip), per the assignment.
+HW = {
+    "peak_flops_bf16": 197e12,  # FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+}
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_bytes_per_device: float,
+) -> dict:
+    """Three roofline times (seconds) from per-device quantities.
+
+    compute = FLOPs / peak;  memory = bytes / HBM_bw;
+    collective = bytes / ICI link bw.  The dominant term is the
+    bottleneck; 'roofline_fraction' = compute / max(all) (how close the
+    step is to being compute-bound at peak).
+    """
+    t_compute = flops_per_device / HW["peak_flops_bf16"]
+    t_memory = hbm_bytes_per_device / HW["hbm_bw"]
+    t_collective = collective_bytes_per_device / HW["ici_bw"]
+    bound = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    t_max = max(t_compute, t_memory, t_collective)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "bound": bound,
+        "roofline_fraction": (t_compute / t_max) if t_max > 0 else 0.0,
+    }

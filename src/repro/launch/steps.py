@@ -1,0 +1,55 @@
+"""Step functions lowered by the dry-run, trainer, and server.
+
+Each factory closes over the model/optimizer config and returns a pure
+function of (state..., batch) suitable for jax.jit with explicit
+in/out shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import OptimizerConfig, adamw_step
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step", "input_specs"]
+
+
+def make_train_step(model, opt_cfg: OptimizerConfig):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+        new_params, new_opt, opt_metrics = adamw_step(grads, opt_state, params, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, max_len: int):
+    def prefill_step(params, tokens):
+        return model.prefill(params, tokens, max_len=max_len)
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step
+
+
+def input_specs(cfg, shape_spec):
+    """ShapeDtypeStruct stand-ins for every model input of one cell.
+
+    train:   {"tokens": (B, S+1)}  (the model trains on exactly S positions)
+    prefill: tokens (B, S)
+    decode:  tokens (B, 1) + cache built by the caller (needs sharding)
+    """
+    b, s = shape_spec.global_batch, shape_spec.seq_len
+    if shape_spec.step == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, s + 1), jnp.int32)}
+    if shape_spec.step == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape_spec.step == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    raise ValueError(shape_spec.step)

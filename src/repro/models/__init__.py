@@ -1,0 +1,4 @@
+from repro.models.model import LM
+from repro.models import attention, blocks, kvcache, layers, moe, rglru, spec, ssd, transformer
+
+__all__ = ["LM", "attention", "blocks", "kvcache", "layers", "moe", "rglru", "spec", "ssd", "transformer"]

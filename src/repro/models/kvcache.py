@@ -1,0 +1,57 @@
+"""Decode-cache construction: concrete zeros or abstract ShapeDtypeStructs.
+
+The cache pytree mirrors the params structure produced by
+``transformer.model_spec``: stacked per pattern position for the scanned
+periods, unstacked for the tail, plus a scalar position counter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import blocks
+
+__all__ = ["init_cache", "abstract_cache", "cache_bytes"]
+
+
+def _layer_template(cfg, kind, batch, max_len):
+    return blocks.cache_spec(cfg, kind, batch, max_len)
+
+
+def _build(cfg, batch, max_len, make_leaf):
+    block_caches = []
+    for kind in cfg.pattern:
+        tpl = _layer_template(cfg, kind, batch, max_len)
+        stacked = {
+            name: make_leaf((cfg.n_periods,) + shape, dtype)
+            for name, (shape, dtype) in tpl.items()
+        }
+        block_caches.append(stacked)
+    tail = []
+    for i in range(cfg.n_tail):
+        kind = cfg.layer_kind(cfg.n_periods * cfg.period + i)
+        tpl = _layer_template(cfg, kind, batch, max_len)
+        tail.append({name: make_leaf(shape, dtype) for name, (shape, dtype) in tpl.items()})
+    return {"blocks": block_caches, "tail": tail}
+
+
+def init_cache(cfg, batch: int, max_len: int, start_pos: int = 0):
+    cache = _build(cfg, batch, max_len, lambda s, d: jnp.zeros(s, d))
+    cache["pos"] = jnp.asarray(start_pos, jnp.int32)
+    return cache
+
+
+def abstract_cache(cfg, batch: int, max_len: int):
+    cache = _build(cfg, batch, max_len, jax.ShapeDtypeStruct)
+    cache["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache
+
+
+def cache_bytes(cfg, batch: int, max_len: int) -> int:
+    abstract = abstract_cache(cfg, batch, max_len)
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree.leaves(abstract)
+        if hasattr(x, "shape")
+    )

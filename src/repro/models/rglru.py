@@ -1,0 +1,113 @@
+"""Griffin recurrent block: conv1d + RG-LRU gated linear recurrence.
+
+[arXiv:2402.19427] §2.4: the temporal-mixing block is
+  branch 1: linear(D -> lru) -> causal conv1d(4) -> RG-LRU
+  branch 2: linear(D -> lru) -> GeLU
+  output:   (branch1 * branch2) -> linear(lru -> D)
+
+RG-LRU:
+  r_t = sigmoid(a_gate(x_t));   i_t = sigmoid(x_gate(x_t))
+  log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Gates here are per-channel diagonal (weight + bias per channel) rather
+than Griffin's block-diagonal matrices — a parameter-count simplification
+recorded in DESIGN.md; the recurrence dynamics are identical.
+
+Full sequences use ``jax.lax.associative_scan`` (log-depth parallel
+recurrence — the TPU-friendly replacement for the paper's custom linear
+scan kernel); decode is one fused elementwise step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.spec import P
+
+__all__ = ["rglru_spec", "rglru_forward", "rglru_decode_step", "rglru_init_cache_shapes"]
+
+_C = 8.0
+
+
+def rglru_spec(cfg) -> dict:
+    d, lru = cfg.d_model, cfg.lru_width
+    return {
+        "w_rec": P((d, lru), ("embed", "lru")),
+        "w_gate_branch": P((d, lru), ("embed", "lru")),
+        "conv_w": P((cfg.conv_width, lru), ("conv", "lru"), init="small"),
+        "conv_b": P((lru,), ("lru",), init="zeros"),
+        "a_gate_w": P((lru,), ("lru",), init="small"),
+        "a_gate_b": P((lru,), ("lru",), init="zeros"),
+        "x_gate_w": P((lru,), ("lru",), init="small"),
+        "x_gate_b": P((lru,), ("lru",), init="zeros"),
+        "Lambda": P((lru,), ("lru",), init="ones"),  # softplus(1) ~ 1.31
+        "w_out": P((lru, d), ("lru", "embed")),
+    }
+
+
+def _conv1d(x, w, b, state=None):
+    """Depthwise causal conv, unrolled taps.  x: (B, S, C); w: (W, C)."""
+    bsz, s, c = x.shape
+    wlen = w.shape[0]
+    if state is None:
+        state = jnp.zeros((bsz, wlen - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(wlen):
+        y = y + xp[:, i : i + s, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    y = (y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, s:, :] if s >= wlen - 1 else xp[:, -(wlen - 1):, :]
+    return y, new_state
+
+
+def _gates(params, u):
+    """log_a (B, S, lru) fp32 and gated input."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf * params["a_gate_w"].astype(jnp.float32) + params["a_gate_b"])
+    i = jax.nn.sigmoid(uf * params["x_gate_w"].astype(jnp.float32) + params["x_gate_b"])
+    log_a = -_C * jax.nn.softplus(params["Lambda"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalization (Griffin eq. 2); clamp for stability
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0))
+    return a, beta * i * uf
+
+
+def rglru_forward(params, x, cfg, conv_state=None, h0=None):
+    """Full-sequence Griffin recurrent block.  x: (B, S, D).
+
+    Returns (y, (conv_state, h_last))."""
+    u = x @ params["w_rec"]
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]).astype(jnp.float32), approximate=True)
+    u, conv_state = _conv1d(u, params["conv_w"], params["conv_b"], conv_state)
+    u = shard_act(u, "act_lru")
+    a, bx = _gates(params, u)
+    if h0 is not None:
+        # Fold the initial state in as a virtual step: h_1' = a_1 h0 + bx_1
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    y = (h * gate).astype(x.dtype) @ params["w_out"]
+    return y, (conv_state, h[:, -1, :])
+
+
+def rglru_decode_step(params, x, cache, cfg):
+    """One token.  x: (B, 1, D); cache = (conv_state, h)."""
+    conv_state, h = cache
+    u = x @ params["w_rec"]
+    gate = jax.nn.gelu((x @ params["w_gate_branch"]).astype(jnp.float32), approximate=True)
+    u, conv_state = _conv1d(u, params["conv_w"], params["conv_b"], conv_state)
+    a, bx = _gates(params, u)
+    h = a[:, 0, :] * h.astype(jnp.float32) + bx[:, 0, :]
+    y = (h[:, None, :] * gate).astype(x.dtype) @ params["w_out"]
+    return y, (conv_state, h)
+
+
+def rglru_init_cache_shapes(cfg, batch: int):
+    return ((batch, cfg.conv_width - 1, cfg.lru_width), (batch, cfg.lru_width))

@@ -1,0 +1,9 @@
+from repro.serving.profiles import lm_latency_model, lm_profile, load_dryrun_record
+from repro.serving.runtime import ExecutionReport, LMExecutor, SwapManager, WindowQueue
+from repro.serving.server import EdgeServer, ServeStats
+
+__all__ = [
+    "lm_latency_model", "lm_profile", "load_dryrun_record",
+    "ExecutionReport", "LMExecutor", "SwapManager", "WindowQueue",
+    "EdgeServer", "ServeStats",
+]

@@ -1,0 +1,207 @@
+"""Serving runtime: window queue, model-swap manager, batch executor.
+
+This is the *real* execution half of the system (the paper's "worker"):
+the scheduler (repro.core) decides (model, order, batch); the runtime
+loads weights, runs prefill+decode on actual JAX models, and accounts
+latency + swap costs.  On this CPU container it runs reduced configs;
+the same code path drives full configs on a pod (the jitted step fns are
+the ones the dry-run compiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import OrderedDict
+from typing import Callable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Request, Schedule
+from repro.models import LM
+
+__all__ = ["WindowQueue", "SwapManager", "LMExecutor", "ExecutionReport"]
+
+
+class WindowQueue:
+    """Scheduling-window request queue (paper §III-B: requests enqueue
+    during a window, then are scheduled as a set)."""
+
+    def __init__(self, window_s: float = 0.1):
+        self.window_s = window_s
+        self._pending: list[Request] = []
+
+    def submit(self, request: Request):
+        self._pending.append(request)
+
+    def drain_window(self, now: float) -> list[Request]:
+        """Requests that arrived by ``now`` (window close)."""
+        ready = [r for r in self._pending if r.arrival_s <= now]
+        self._pending = [r for r in self._pending if r.arrival_s > now]
+        return sorted(ready, key=lambda r: r.arrival_s)
+
+    def __len__(self):
+        return len(self._pending)
+
+
+class SwapManager:
+    """LRU model residency with byte-accounted capacity.
+
+    ``load(name)`` returns the simulated swap latency (0 when resident)
+    and updates residency; actual weight materialization is delegated to
+    the executor's lazy param store.
+    """
+
+    def __init__(self, capacity_bytes: int | None, sizes: Mapping[str, int],
+                 load_latency: Mapping[str, float]):
+        self.capacity = capacity_bytes
+        self.sizes = dict(sizes)
+        self.load_latency = dict(load_latency)
+        self._resident: OrderedDict[str, int] = OrderedDict()
+        self.swap_count = 0
+        self.evictions = 0
+
+    def resident_bytes(self) -> int:
+        return sum(self._resident.values())
+
+    def is_resident(self, name: str) -> bool:
+        return name in self._resident
+
+    def load(self, name: str) -> float:
+        if name in self._resident:
+            self._resident.move_to_end(name)
+            return 0.0
+        self.swap_count += 1
+        size = self.sizes.get(name, 0)
+        if self.capacity is not None:
+            while self._resident and self.resident_bytes() + size > self.capacity:
+                self._resident.popitem(last=False)
+                self.evictions += 1
+        self._resident[name] = size
+        return self.load_latency.get(name, 0.0)
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    request_ids: list
+    model: str
+    batch_size: int
+    swap_s: float
+    prefill_s: float
+    decode_s: float
+    tokens: np.ndarray  # (B, new_tokens) generated ids
+    predictions: list  # per-request predicted class (argmax over option logits)
+
+    @property
+    def total_s(self) -> float:
+        return self.swap_s + self.prefill_s + self.decode_s
+
+
+class LMExecutor:
+    """Executes scheduled batches on real (reduced-config) JAX models.
+
+    Variants: {name: (ModelConfig, seed)} — params are materialized
+    lazily on first use and cached (host RAM is the "disk"; the
+    SwapManager decides what is "in HBM").
+
+    Classification convention for the paper's applications: each request
+    carries ``features`` already tokenized (prompt ids); the predicted
+    class = argmax over the logits of ``class_token_ids`` after prefill.
+    """
+
+    def __init__(self, variants: Mapping[str, tuple], capacity_bytes: int | None = None,
+                 new_tokens: int = 4):
+        self.variants = dict(variants)
+        self.new_tokens = new_tokens
+        self._models: dict[str, LM] = {}
+        self._params: dict[str, dict] = {}
+        sizes, loads = {}, {}
+        for name, (cfg, seed) in self.variants.items():
+            bytes_ = 2 * cfg.param_count() if cfg.dtype == "bfloat16" else 4 * cfg.param_count()
+            sizes[name] = bytes_
+            loads[name] = bytes_ / 25e9  # host->device staging
+        self.swaps = SwapManager(capacity_bytes, sizes, loads)
+        self._prefill_jit: dict[str, Callable] = {}
+        self._decode_jit: dict[str, Callable] = {}
+
+    def _get(self, name: str):
+        if name not in self._models:
+            cfg, seed = self.variants[name]
+            model = LM(cfg)
+            self._models[name] = model
+            self._params[name] = model.init(seed)
+            self._prefill_jit[name] = jax.jit(
+                lambda p, t, m=model: m.prefill(p, t, max_len=t.shape[1] + self.new_tokens)
+            )
+            self._decode_jit[name] = jax.jit(lambda p, c, t, m=model: m.decode_step(p, c, t))
+        return self._models[name], self._params[name]
+
+    def run_batch(self, model_name: str, prompts: np.ndarray, request_ids: list,
+                  class_token_ids: Optional[np.ndarray] = None) -> ExecutionReport:
+        """prompts: (B, S) int32 (pre-padded)."""
+        model, params = self._get(model_name)
+        swap_s = self.swaps.load(model_name)
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill_jit[model_name](params, jnp.asarray(prompts))
+        logits.block_until_ready()
+        t1 = time.perf_counter()
+        toks = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        preds = None
+        if class_token_ids is not None:
+            option_logits = np.asarray(logits)[:, np.asarray(class_token_ids)]
+            preds = list(np.argmax(option_logits, axis=-1))
+        toks.append(tok)
+        for _ in range(self.new_tokens - 1):
+            logits, cache = self._decode_jit[model_name](params, cache, tok[:, None])
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(tok)
+        tok.block_until_ready()
+        t2 = time.perf_counter()
+        return ExecutionReport(
+            request_ids=request_ids,
+            model=model_name,
+            batch_size=prompts.shape[0],
+            swap_s=swap_s,
+            prefill_s=t1 - t0,
+            decode_s=t2 - t1,
+            tokens=np.stack([np.asarray(t) for t in toks], axis=1),
+            predictions=preds if preds is not None else [None] * prompts.shape[0],
+        )
+
+    def execute_schedule(self, schedule: Schedule, prompt_fn: Callable[[Request], np.ndarray],
+                         class_token_ids=None) -> list[ExecutionReport]:
+        """Run a scheduler-produced Schedule batch by batch (grouped entries
+        with the same batch_id execute as one padded batch)."""
+        reports = []
+        entries = schedule.sorted_entries()
+        i = 0
+        while i < len(entries):
+            j = i
+            while (
+                j + 1 < len(entries)
+                and entries[j + 1].batch_id == entries[i].batch_id
+                and entries[i].batch_id >= 0
+                and entries[j + 1].model == entries[i].model
+            ):
+                j += 1
+            batch = entries[i : j + 1]
+            prompts = [prompt_fn(e.request) for e in batch]
+            maxlen = max(p.shape[0] for p in prompts)
+            padded = np.zeros((len(prompts), maxlen), np.int32)
+            for k, p in enumerate(prompts):
+                padded[k, :p.shape[0]] = p
+            if batch[0].model.endswith(":short_circuit"):
+                # §V-C1: answered by the SneakPeek stage, no model execution.
+                reports.append(ExecutionReport(
+                    request_ids=[e.request.rid for e in batch], model=batch[0].model,
+                    batch_size=len(batch), swap_s=0.0, prefill_s=0.0, decode_s=0.0,
+                    tokens=np.zeros((len(batch), 0), np.int32),
+                    predictions=[None] * len(batch)))
+            else:
+                reports.append(self.run_batch(
+                    batch[0].model, padded, [e.request.rid for e in batch], class_token_ids))
+            i = j + 1
+        return reports

@@ -1,0 +1,201 @@
+"""Sharding-aware, atomic, elastic checkpointing.
+
+Layout (one directory per step):
+
+    <dir>/step_000123/
+        manifest.json      # tree structure, shapes, dtypes, step, blake2 digests
+        arrays.npz         # flattened "path -> array" archive
+    <dir>/LATEST           # text file naming the last COMMITTED step dir
+
+Commit protocol: write into ``step_X.tmp``, fsync, rename to ``step_X``,
+then rewrite LATEST — a crash at any point leaves either the previous
+checkpoint or a complete new one (restore ignores ``*.tmp``).
+
+Elastic restore: arrays are saved densely (single-process container);
+``restore`` re-device_puts every leaf with the *target* sharding, so the
+mesh shape/axes may differ from the one that saved (reshard-on-load).
+Real multi-host deployments would write per-host shards with the same
+manifest/commit protocol; the commit and manifest logic here is the part
+that carries over unchanged.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import ml_dtypes
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "list_steps"]
+
+# npz can't represent the ML dtypes; store them as same-width uint views
+# and record the logical dtype in the manifest.
+_VIEW_DTYPES = {
+    "bfloat16": (np.uint16, ml_dtypes.bfloat16),
+    "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+    "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2),
+}
+
+
+def _to_savable(a: np.ndarray) -> tuple[np.ndarray, str]:
+    name = str(a.dtype)
+    if name in _VIEW_DTYPES:
+        return a.view(_VIEW_DTYPES[name][0]), name
+    return a, name
+
+
+def _from_savable(a: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _VIEW_DTYPES:
+        return a.view(_VIEW_DTYPES[dtype_name][1])
+    return a
+
+_SEP = "/"
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if tree is None:
+        return out  # structural None (e.g. absent fp32 master copy)
+    if isinstance(tree, dict):
+        for k in sorted(tree.keys()):
+            out.update(_flatten(tree[k], f"{prefix}{_SEP}{k}" if prefix else str(k)))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{_SEP}[{i}]" if prefix else f"[{i}]"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _structure(tree):
+    if tree is None:
+        return {"__kind__": "none"}
+    if isinstance(tree, dict):
+        return {"__kind__": "dict", "keys": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "list" if isinstance(tree, list) else "tuple",
+                "items": [_structure(v) for v in tree]}
+    return {"__kind__": "leaf"}
+
+
+def _rebuild(struct, flat, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "none":
+        return None
+    if kind == "dict":
+        return {
+            k: _rebuild(v, flat, f"{prefix}{_SEP}{k}" if prefix else str(k))
+            for k, v in struct["keys"].items()
+        }
+    if kind in ("list", "tuple"):
+        items = [
+            _rebuild(v, flat, f"{prefix}{_SEP}[{i}]" if prefix else f"[{i}]")
+            for i, v in enumerate(struct["items"])
+        ]
+        return items if kind == "list" else tuple(items)
+    return flat[prefix]
+
+
+def save(directory, step: int, state, metadata: dict | None = None, keep: int = 3) -> Path:
+    """Atomically write ``state`` (any pytree of arrays / scalars)."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(state)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a, dtype_name = _to_savable(np.asarray(v))
+        arrays[k] = a
+        dtypes[k] = dtype_name
+    npz_path = tmp / "arrays.npz"
+    np.savez(npz_path, **arrays)
+    digests = {k: hashlib.blake2b(a.tobytes(), digest_size=8).hexdigest() for k, a in arrays.items()}
+    manifest = {
+        "step": step,
+        "structure": _structure(state),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": dtypes,
+        "digests": digests,
+        "metadata": metadata or {},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    with open(tmp / "manifest.json") as f:
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    (directory / "LATEST.tmp").write_text(final.name)
+    os.replace(directory / "LATEST.tmp", directory / "LATEST")
+
+    # retention
+    steps = list_steps(directory)
+    for s in steps[:-keep]:
+        shutil.rmtree(directory / f"step_{s:08d}", ignore_errors=True)
+    return final
+
+
+def list_steps(directory) -> list[int]:
+    directory = Path(directory)
+    out = []
+    for p in directory.glob("step_*"):
+        if p.suffix == ".tmp" or not p.is_dir():
+            continue
+        try:
+            out.append(int(p.name.split("_")[1]))
+        except (IndexError, ValueError):
+            continue
+    return sorted(out)
+
+
+def latest_step(directory) -> int | None:
+    directory = Path(directory)
+    latest = directory / "LATEST"
+    if latest.exists():
+        name = latest.read_text().strip()
+        p = directory / name
+        if p.is_dir():
+            return int(name.split("_")[1])
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory, step: int | None = None, shardings=None, verify: bool = True):
+    """Load a checkpoint; returns (state, metadata).
+
+    ``shardings``: optional pytree of NamedSharding/None matching the state
+    — each leaf is device_put with its target sharding (elastic reshard).
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = directory / f"step_{step:08d}"
+    manifest = json.loads((path / "manifest.json").read_text())
+    npz = np.load(path / "arrays.npz")
+    flat = {}
+    for k in npz.files:
+        a = npz[k]
+        if verify:
+            d = hashlib.blake2b(a.tobytes(), digest_size=8).hexdigest()
+            if d != manifest["digests"][k]:
+                raise IOError(f"checksum mismatch for {k!r} in {path}")
+        flat[k] = _from_savable(a, manifest["dtypes"][k])
+    state = _rebuild(manifest["structure"], flat)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda x, sh: jax.device_put(x, sh) if sh is not None else jax.device_put(x),
+            state,
+            shardings,
+            is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+        )
+    return state, manifest["metadata"]

@@ -1,0 +1,181 @@
+"""AdamW in pure JAX, with optional int8-quantized moments.
+
+No optax in this environment; this implements exactly what the trainer
+and the dry-run ``train_step`` need:
+
+  * bf16 params + fp32 master copy in the optimizer state,
+  * AdamW with decoupled weight decay + linear-warmup cosine schedule,
+  * optional **int8 block-quantized moments** (8-bit-Adam style, per-row
+    absmax scales): 12 bytes/param -> ~6 bytes/param of optimizer state.
+    This is what fits llama4-maverick-400b's train state on a single
+    v5e pod (see EXPERIMENTS.md §Dry-run).
+
+State layout mirrors the params pytree so the FSDPxTP PartitionSpecs
+apply verbatim to master/m/v (scales shard like their tensors minus the
+last dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerConfig", "init_opt_state", "adamw_step", "learning_rate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+    quantize_moments: bool = False
+    master_dtype: Any = jnp.float32
+
+
+def learning_rate(cfg: OptimizerConfig, step):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.learning_rate * warm * decay
+
+
+# ----------------------------------------------------------- int8 moments
+
+
+def _quant(x):
+    """Per-row (last-dim) absmax int8 quantization.  Returns (q, scale)."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def _moment_zeros(p, quantized: bool):
+    if not quantized:
+        return jnp.zeros(p.shape, jnp.float32)
+    return {
+        "q": jnp.zeros(p.shape, jnp.int8),
+        "scale": jnp.zeros(p.shape[:-1] + (1,), jnp.float32),
+    }
+
+
+def _moment_read(m, quantized: bool, sqrt_space: bool = False):
+    if not quantized:
+        return m
+    x = _dequant(m["q"], m["scale"])
+    return x * x if sqrt_space else x
+
+
+def _moment_write(x, quantized: bool, sqrt_space: bool = False):
+    """``sqrt_space`` stores sqrt(x) (x >= 0): the second moment's dynamic
+    range is huge and the update divides by sqrt(v), so quantizing in
+    sqrt-space is what keeps int8 Adam on the fp32 trajectory."""
+    if not quantized:
+        return x
+    q, scale = _quant(jnp.sqrt(jnp.maximum(x, 0.0)) if sqrt_space else x)
+    return {"q": q, "scale": scale}
+
+
+# ----------------------------------------------------------- state / step
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    q = cfg.quantize_moments
+    # Keep an fp32 master copy only when params are lower precision —
+    # otherwise master would ALIAS params (same buffers), which breaks
+    # donation (double-donate) and wastes memory.
+    needs_master = any(
+        x.dtype != cfg.master_dtype for x in jax.tree.leaves(params)
+    )
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": (
+            jax.tree.map(lambda p: p.astype(cfg.master_dtype), params)
+            if needs_master else None
+        ),
+        "m": jax.tree.map(lambda p: _moment_zeros(p, q), params),
+        "v": jax.tree.map(lambda p: _moment_zeros(p, q), params),
+    }
+
+
+def _global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_step(grads, opt_state, params, cfg: OptimizerConfig):
+    """One AdamW update.  Returns (new_params, new_opt_state, metrics)."""
+    q = cfg.quantize_moments
+    step = opt_state["step"] + 1
+    lr = learning_rate(cfg, step)
+
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip > 0 else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    is_moment = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * clip
+        m_f = _moment_read(m, q)
+        v_f = _moment_read(v, q, sqrt_space=True)
+        m_new = b1 * m_f + (1.0 - b1) * g
+        v_new = b2 * v_f + (1.0 - b2) * g * g
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        update = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        master_new = master.astype(jnp.float32) - lr * (
+            update + cfg.weight_decay * master.astype(jnp.float32)
+        )
+        return (
+            _moment_write(m_new, q),
+            _moment_write(v_new, q, sqrt_space=True),
+            master_new.astype(cfg.master_dtype),
+        )
+
+    has_master = opt_state["master"] is not None
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_master = (
+        jax.tree.leaves(opt_state["master"]) if has_master else jax.tree.leaves(params)
+    )
+    new_m, new_v, new_master = [], [], []
+    for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_master):
+        mn, vn, man = upd(g, m, v, ma)
+        new_m.append(mn)
+        new_v.append(vn)
+        new_master.append(man)
+
+    masters = jax.tree.unflatten(treedef, new_master)
+    new_state = {
+        "step": step,
+        "master": masters if has_master else None,
+        "m": jax.tree.unflatten(treedef, new_m),
+        "v": jax.tree.unflatten(treedef, new_v),
+    }
+    param_dtype = jax.tree.leaves(params)[0].dtype
+    new_params = jax.tree.map(lambda ma: ma.astype(param_dtype), masters)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

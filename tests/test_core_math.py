@@ -1,0 +1,181 @@
+"""Unit + property tests for the paper's core math (Eq. 2, 7-12)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accuracy import (
+    ModelProfile,
+    accuracy_from_confusion,
+    class_frequencies_from_confusion,
+    confusion_with_accuracy,
+    expected_accuracy,
+    recalls_from_confusion,
+)
+from repro.core.dirichlet import (
+    DirichletPrior,
+    jeffreys_prior,
+    posterior,
+    posterior_mean,
+    posterior_variance,
+    strongly_informative_prior,
+    weakly_informative_prior,
+)
+from repro.core.priority import accuracy_variance, request_priority
+from repro.core.types import Application, Request
+from repro.core.utility import PENALTIES, linear_penalty, sigmoid_penalty, step_penalty, utility
+
+
+# ---------------------------------------------------------------- Eq. 7-9
+
+
+@st.composite
+def confusions(draw):
+    n = draw(st.integers(2, 6))
+    z = draw(
+        st.lists(
+            st.lists(st.integers(0, 50), min_size=n, max_size=n),
+            min_size=n, max_size=n,
+        )
+    )
+    z = np.asarray(z, dtype=float) + np.eye(n)  # ensure nonempty rows/diagonal
+    return z
+
+
+@given(confusions())
+@settings(max_examples=50, deadline=None)
+def test_eq9_decomposition_recovers_eq7(z):
+    """Accuracy(m) == sum_i theta_i recall_i with test-set theta (Eq. 7 == Eq. 9)."""
+    acc = accuracy_from_confusion(z)
+    rec = recalls_from_confusion(z)
+    theta = class_frequencies_from_confusion(z)
+    assert np.isclose(acc, expected_accuracy(rec, theta), atol=1e-12)
+
+
+@given(confusions())
+@settings(max_examples=30, deadline=None)
+def test_oracle_accuracy_is_true_class_recall(z):
+    rec = recalls_from_confusion(z)
+    for c in range(z.shape[0]):
+        onehot = np.zeros(z.shape[0])
+        onehot[c] = 1.0
+        assert np.isclose(expected_accuracy(rec, onehot), rec[c])
+
+
+def test_confusion_with_accuracy_hits_target():
+    for acc in (0.3, 0.55, 0.9):
+        z = confusion_with_accuracy(5, acc)
+        assert np.isclose(accuracy_from_confusion(z), acc, atol=1e-9)
+
+
+# ---------------------------------------------------------------- Eq. 10-11
+
+
+def test_dirichlet_conjugate_update():
+    prior = jeffreys_prior(3)
+    y = np.array([2.0, 3.0, 0.0])
+    post = posterior(prior, y)
+    np.testing.assert_allclose(post.alpha, [2.5, 3.5, 0.5])
+    np.testing.assert_allclose(posterior_mean(prior, y), post.alpha / post.alpha.sum())
+
+
+@given(
+    st.integers(2, 6),
+    st.lists(st.integers(0, 20), min_size=2, max_size=6),
+)
+@settings(max_examples=50, deadline=None)
+def test_posterior_mean_is_distribution(nc, counts):
+    counts = (counts + [0] * nc)[:nc]
+    mean = posterior_mean(jeffreys_prior(nc), np.asarray(counts, float))
+    assert np.all(mean > 0) and np.isclose(mean.sum(), 1.0)
+
+
+def test_posterior_concentrates_with_evidence():
+    """More k-NN votes for a class -> strictly larger posterior mass."""
+    prior = jeffreys_prior(2)
+    weak = posterior_mean(prior, np.array([1.0, 4.0]))
+    strong = posterior_mean(prior, np.array([0.0, 50.0]))
+    assert strong[1] > weak[1] > 0.5
+
+
+def test_strong_prior_suppresses_evidence():
+    """Paper §VI-C3: a strong prior dampens the data signal."""
+    freqs = np.array([0.8, 0.2])
+    y = np.array([0.0, 5.0])  # data says class 1
+    weak = posterior_mean(weakly_informative_prior(freqs), y)
+    strong = posterior_mean(strongly_informative_prior(freqs, 100), y)
+    assert weak[1] > strong[1]
+    assert strong[1] < 0.5  # strong prior still believes class 0
+
+
+def test_prior_validation():
+    with pytest.raises(ValueError):
+        DirichletPrior(np.array([0.5, 0.0]))
+    with pytest.raises(ValueError):
+        weakly_informative_prior(np.array([0.5, 0.6]))
+
+
+# ---------------------------------------------------------------- Eq. 2 penalties
+
+
+@given(st.floats(0.01, 10.0), st.floats(0.0, 20.0))
+@settings(max_examples=100, deadline=None)
+def test_penalties_monotone_and_bounded(deadline, completion):
+    for name, fn in PENALTIES.items():
+        g = fn(deadline, completion)
+        assert 0.0 <= g <= 1.0
+        # monotone in completion
+        assert fn(deadline, completion + 0.5) >= g - 1e-12
+
+
+def test_penalty_shapes():
+    assert step_penalty(1.0, 0.5) == 0.0 and step_penalty(1.0, 1.5) == 1.0
+    assert linear_penalty(1.0, 1.5) == pytest.approx(0.5)
+    assert linear_penalty(1.0, 3.0) == 1.0
+    # sigmoid: ~0 for small overshoot, 0.5 at 50% overshoot, ->1 at 100%
+    assert sigmoid_penalty(1.0, 1.05) < 0.01
+    assert sigmoid_penalty(1.0, 1.5) == pytest.approx(0.5)
+    assert sigmoid_penalty(1.0, 2.1) == 1.0
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.01, 5.0), st.floats(0.0, 5.0), st.floats(0.001, 2.0))
+@settings(max_examples=100, deadline=None)
+def test_utility_bounds(acc, deadline, start, latency):
+    for fn in PENALTIES.values():
+        u = utility(acc, deadline, start, latency, fn)
+        assert 0.0 <= u <= acc + 1e-12
+        # meeting the deadline yields exactly the accuracy
+        if start + latency <= deadline:
+            assert u == pytest.approx(acc)
+
+
+# ---------------------------------------------------------------- Eq. 12
+
+
+def _app(recalls_list, latencies=None):
+    models = [
+        ModelProfile(name=f"m{i}", recalls=np.asarray(r), latency_s=(latencies or [0.01] * len(recalls_list))[i])
+        for i, r in enumerate(recalls_list)
+    ]
+    return Application(name="a", models=models, penalty="sigmoid")
+
+
+def test_priority_increases_toward_deadline():
+    app = _app([[0.9, 0.9], [0.5, 0.5]])
+    r = Request(rid=0, app="a", arrival_s=0.0, deadline_s=1.0)
+    p_far = request_priority(r, app, now=0.0)
+    p_near = request_priority(r, app, now=0.9)
+    assert p_near > p_far
+
+
+def test_priority_increases_with_model_variance():
+    hi_var = _app([[0.95, 0.95], [0.3, 0.3]])
+    lo_var = _app([[0.62, 0.62], [0.63, 0.63]])
+    r = Request(rid=0, app="a", arrival_s=0.0, deadline_s=1.0)
+    assert request_priority(r, hi_var, 0.0) > request_priority(r, lo_var, 0.0)
+
+
+def test_single_model_has_zero_variance():
+    assert accuracy_variance([0.7]) == 0.0
+    app = _app([[0.7, 0.7]])
+    r = Request(rid=0, app="a", arrival_s=0.0, deadline_s=1.0)
+    assert request_priority(r, app, 0.0) == pytest.approx(np.exp(-1.0))

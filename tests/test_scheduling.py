@@ -1,0 +1,268 @@
+"""Scheduler tests: policies, grouping, brute force optimality, multi-worker."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Application,
+    ModelProfile,
+    Request,
+    Schedule,
+    ScheduleEntry,
+    Worker,
+    evaluate,
+    grouped_schedule,
+    group_by_app,
+    make_policy,
+    multiworker_schedule,
+    run_window,
+    schedule_window,
+    split_groups_by_label,
+)
+from repro.core.bruteforce import brute_force_groups, brute_force_requests
+from repro.core.evaluation import WorkerTimeline
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+
+def _mk_app(name, recalls_lat, penalty="sigmoid", load=0.0):
+    models = [
+        ModelProfile(name=f"{name}-m{i}", recalls=np.asarray(r), latency_s=lat, load_latency_s=load)
+        for i, (r, lat) in enumerate(recalls_lat)
+    ]
+    return Application(name=name, models=models, penalty=penalty)
+
+
+def _mk_requests(app_names, deadlines, start_rid=0):
+    return [
+        Request(rid=start_rid + i, app=a, arrival_s=0.0, deadline_s=d, true_label=0)
+        for i, (a, d) in enumerate(zip(app_names, deadlines))
+    ]
+
+
+@pytest.fixture
+def two_apps():
+    a = _mk_app("a", [([0.6, 0.6], 0.01), ([0.9, 0.9], 0.05)], load=0.02)
+    b = _mk_app("b", [([0.7, 0.7], 0.02), ([0.95, 0.95], 0.08)], load=0.03)
+    return {"a": a, "b": b}
+
+
+# ---------------------------------------------------------------- timelines
+
+
+def test_timeline_swap_accounting(two_apps):
+    tl = WorkerTimeline(now=0.0)
+    a = two_apps["a"]
+    s0, c0 = tl.run_batch(a.model("a-m0"), 1)  # swap 0.02 + 0.01
+    assert (s0, c0) == (0.0, pytest.approx(0.03))
+    s1, c1 = tl.run_batch(a.model("a-m0"), 1)  # resident: no swap
+    assert c1 - s1 == pytest.approx(0.01)
+    s2, c2 = tl.run_batch(a.model("a-m1"), 1)  # swap again
+    assert c2 - s2 == pytest.approx(0.07)
+
+
+def test_evaluate_batches_share_swap(two_apps):
+    reqs = _mk_requests(["a"] * 3, [1.0, 1.0, 1.0])
+    entries = [
+        ScheduleEntry(request=r, model="a-m0", order=i + 1, batch_id=0) for i, r in enumerate(reqs)
+    ]
+    res = evaluate(Schedule(entries=entries), two_apps, now=0.0)
+    # one swap (0.02) + 3x latency 0.01 -> all complete at 0.05
+    assert np.allclose(res.completions, 0.05)
+
+
+# ---------------------------------------------------------------- policies
+
+
+def test_all_policies_produce_valid_schedules(two_apps):
+    reqs = _mk_requests(["a", "b", "a", "b"], [0.05, 0.08, 0.3, 0.4])
+    for name in ("MaxAcc-EDF", "LO-EDF", "LO-Priority", "Grouped", "SneakPeek"):
+        pol = make_policy(name)
+        sched, _ = schedule_window(pol, reqs, two_apps, now=0.0)
+        sched.validate()
+        assert len(sched) == len(reqs)
+
+
+def test_maxacc_selects_highest_accuracy(two_apps):
+    reqs = _mk_requests(["a"], [0.01])  # hopeless deadline
+    sched, _ = schedule_window(make_policy("MaxAcc-EDF"), reqs, two_apps, 0.0)
+    assert sched.entries[0].model == "a-m1"  # the accurate one, deadline ignored
+
+
+def test_locally_optimal_respects_deadline(two_apps):
+    # deadline admits only the fast model (0.02 swap + 0.01 lat = 0.03)
+    reqs = _mk_requests(["a"], [0.035])
+    sched, _ = schedule_window(make_policy("LO-EDF"), reqs, two_apps, 0.0)
+    assert sched.entries[0].model == "a-m0"
+    # generous deadline -> the accurate model
+    reqs = _mk_requests(["a"], [1.0])
+    sched, _ = schedule_window(make_policy("LO-EDF"), reqs, two_apps, 0.0)
+    assert sched.entries[0].model == "a-m1"
+
+
+# ---------------------------------------------------------------- grouping
+
+
+def test_group_by_app(two_apps):
+    reqs = _mk_requests(["a", "b", "a"], [0.1, 0.2, 0.3])
+    groups = group_by_app(reqs)
+    assert set(groups) == {"a", "b"}
+    assert len(groups["a"]) == 2
+
+
+def test_group_split_by_label(two_apps):
+    reqs = _mk_requests(["a"] * 3, [0.1, 0.2, 0.3])
+    reqs[0].theta = np.array([0.9, 0.1])
+    reqs[1].theta = np.array([0.2, 0.8])
+    reqs[2].theta = np.array([0.5, 0.5])  # inconclusive
+    groups = split_groups_by_label({"a": reqs}, two_apps)
+    assert set(groups) == {"a#label0", "a#label1", "a#mixed"}
+    # no split when all agree (Fig. 4 left)
+    for r in reqs:
+        r.theta = np.array([0.9, 0.1])
+    groups = split_groups_by_label({"a": reqs}, two_apps)
+    assert set(groups) == {"a"}
+
+
+def test_grouped_batches_one_model_per_group(two_apps):
+    reqs = _mk_requests(["a", "b", "a", "b", "a"], [0.2] * 5)
+    sched = grouped_schedule(reqs, two_apps, now=0.0, tau=0)  # force heuristic path
+    by_app = {}
+    for e in sched.entries:
+        by_app.setdefault(e.request.app, set()).add(e.model)
+    assert all(len(models) == 1 for models in by_app.values())
+
+
+def test_grouped_beats_ungrouped_under_swap_pressure(two_apps):
+    """The paper's core claim: grouping amortizes swaps -> higher utility."""
+    reqs = _mk_requests(["a", "b"] * 4, [0.15] * 8)
+    u_grouped = evaluate(
+        grouped_schedule(reqs, two_apps, 0.0, tau=0), two_apps, 0.0
+    ).mean_utility
+    sched_lo, _ = schedule_window(make_policy("LO-EDF"), reqs, two_apps, 0.0)
+    u_lo = evaluate(sched_lo, two_apps, 0.0).mean_utility
+    assert u_grouped > u_lo
+
+
+# ---------------------------------------------------------------- brute force
+
+
+def test_brute_force_requests_beats_heuristics(two_apps):
+    reqs = _mk_requests(["a", "b", "a"], [0.06, 0.1, 0.2])
+    bf = brute_force_requests(reqs, two_apps, 0.0, acc_mode="profiled")
+    u_bf = evaluate(bf, two_apps, 0.0, acc_mode="profiled").mean_utility
+    for name in ("MaxAcc-EDF", "LO-EDF", "LO-Priority"):
+        sched, _ = schedule_window(make_policy(name), reqs, two_apps, 0.0)
+        u = evaluate(sched, two_apps, 0.0, acc_mode="profiled").mean_utility
+        assert u_bf >= u - 1e-9, f"{name} beat brute force"
+
+
+def test_brute_force_groups_beats_grouped_heuristic(two_apps):
+    reqs = _mk_requests(["a", "b", "a", "b"], [0.1, 0.12, 0.2, 0.25])
+    bf = brute_force_groups(group_by_app(reqs), two_apps, 0.0, acc_mode="profiled")
+    u_bf = evaluate(bf, two_apps, 0.0, acc_mode="profiled").mean_utility
+    heur = grouped_schedule(reqs, two_apps, 0.0, tau=0)
+    u_h = evaluate(heur, two_apps, 0.0, acc_mode="profiled").mean_utility
+    assert u_bf >= u_h - 1e-9
+
+
+def test_grouped_uses_bruteforce_below_tau(two_apps):
+    reqs = _mk_requests(["a", "b"], [0.1, 0.2])
+    bf = brute_force_groups(group_by_app(reqs), two_apps, 0.0, acc_mode="profiled")
+    sched = grouped_schedule(reqs, two_apps, 0.0, tau=3)
+    u_bf = evaluate(bf, two_apps, 0.0, acc_mode="profiled").mean_utility
+    u = evaluate(sched, two_apps, 0.0, acc_mode="profiled").mean_utility
+    assert u == pytest.approx(u_bf)
+
+
+# ---------------------------------------------------------------- property
+
+
+@given(
+    n_reqs=st.integers(2, 6),
+    deadlines=st.lists(st.floats(0.02, 0.5), min_size=6, max_size=6),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_policies_never_crash_and_schedule_everything(n_reqs, deadlines, seed):
+    rng = np.random.default_rng(seed)
+    apps = {
+        "a": _mk_app("a", [([0.6, 0.7], 0.01), ([0.9, 0.85], 0.04)], load=0.01),
+        "b": _mk_app("b", [([0.8, 0.5, 0.9], 0.02)], load=0.02),
+    }
+    names = [rng.choice(["a", "b"]) for _ in range(n_reqs)]
+    reqs = _mk_requests(names, deadlines[:n_reqs])
+    for pol_name in ("MaxAcc-EDF", "LO-EDF", "LO-Priority", "Grouped"):
+        sched, _ = schedule_window(make_policy(pol_name), reqs, apps, now=0.0)
+        sched.validate()
+        res = evaluate(sched, apps, 0.0)
+        assert len(res.utilities) == n_reqs
+        assert np.all(res.utilities >= 0) and np.all(res.utilities <= 1)
+
+
+# ---------------------------------------------------------------- multiworker
+
+
+def test_multiworker_spreads_load(two_apps):
+    reqs = _mk_requests(["a"] * 4 + ["b"] * 4, [0.12] * 8)
+    workers = [Worker(0), Worker(1)]
+    sched = multiworker_schedule(reqs, two_apps, workers, now=0.0)
+    sched.validate()
+    used = {e.worker for e in sched.entries}
+    assert used == {0, 1}  # both workers used
+    u2 = evaluate(sched, two_apps, 0.0).mean_utility
+    u1 = evaluate(
+        multiworker_schedule(reqs, two_apps, [Worker(0)], 0.0), two_apps, 0.0
+    ).mean_utility
+    assert u2 >= u1 - 1e-9  # more workers never hurt
+
+
+def test_heterogeneous_worker_prefers_fast(two_apps):
+    reqs = _mk_requests(["a"], [0.05])
+    workers = [Worker(0, speed=0.25), Worker(1, speed=4.0)]
+    sched = multiworker_schedule(reqs, two_apps, workers, now=0.0)
+    assert sched.entries[0].worker == 1
+
+
+# ---------------------------------------------------------------- end-to-end
+
+
+def test_paper_default_window_ordering():
+    """Fig. 5 qualitative claims on the synthetic testbed."""
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=1)
+
+    def fresh():
+        return [Request(r.rid, r.app, r.arrival_s, r.deadline_s, r.features, r.true_label) for r in reqs]
+
+    res = {}
+    for name in ("MaxAcc-EDF", "LO-EDF", "Grouped", "SneakPeek"):
+        pol = make_policy(name)
+        sc = name == "SneakPeek"
+        wr = run_window(pol, fresh(), apps, 0.1,
+                        sneakpeeks=sneaks if (pol.data_aware or sc) else None, short_circuit=sc)
+        res[name] = wr.result
+    assert res["SneakPeek"].mean_utility > res["LO-EDF"].mean_utility
+    assert res["Grouped"].mean_utility > res["LO-EDF"].mean_utility
+    assert res["MaxAcc-EDF"].violations >= res["Grouped"].violations
+    # MaxAcc has the highest accuracy (it always picks the best model)
+    assert res["MaxAcc-EDF"].accuracies.mean() >= res["Grouped"].accuracies.mean()
+
+
+def test_multi_window_simulation_backlog():
+    """Streaming Simulation: backlog carries across windows; all requests served."""
+    from repro.core import Simulation
+    from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    reqs = []
+    for w in range(3):
+        batch = make_requests(list(APP_SPECS.values()), per_app=2, seed=w, start_rid=w * 6)
+        for r in batch:
+            r.arrival_s += w * 0.1
+        reqs.extend(batch)
+    sim = Simulation(make_policy("Grouped"), apps, window_s=0.1, seed=0)
+    out = sim.run(reqs)
+    assert out["count"] == 18
+    assert 0.0 <= out["utility"] <= 1.0
+    assert len(sim.log) == 3  # one entry per non-empty window
+    assert 0.0 <= out["accuracy"] <= 1.0

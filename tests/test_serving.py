@@ -1,0 +1,108 @@
+"""Serving runtime: queue, swap manager, executor on real models, server loop."""
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import Application, ModelProfile, Request, make_policy
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+from repro.serving import EdgeServer, LMExecutor, SwapManager, WindowQueue
+from repro.serving.profiles import lm_latency_model, lm_profile
+
+
+def test_window_queue_drains_by_arrival():
+    q = WindowQueue(window_s=0.1)
+    for t in (0.05, 0.15, 0.08):
+        q.submit(Request(rid=int(t * 100), app="a", arrival_s=t, deadline_s=t + 1))
+    first = q.drain_window(0.1)
+    assert [r.rid for r in first] == [5, 8]
+    assert len(q) == 1
+
+
+def test_swap_manager_lru_eviction():
+    sm = SwapManager(capacity_bytes=100, sizes={"a": 60, "b": 60, "c": 30},
+                     load_latency={"a": 1.0, "b": 2.0, "c": 3.0})
+    assert sm.load("a") == 1.0
+    assert sm.load("b") == 2.0  # evicts a (60+60 > 100)
+    assert not sm.is_resident("a")
+    assert sm.load("c") == 3.0  # fits alongside b
+    assert sm.load("b") == 0.0  # still resident
+    assert sm.evictions == 1 and sm.swap_count == 3
+
+
+def test_executor_runs_reduced_models_and_counts_swaps():
+    variants = {
+        "small": (ARCHS["mamba2-130m"].reduced(), 0),
+        "big": (ARCHS["tinyllama-1.1b"].reduced(), 1),
+    }
+    ex = LMExecutor(variants, new_tokens=2)
+    prompts = np.ones((2, 8), np.int32)
+    r1 = ex.run_batch("small", prompts, [0, 1])
+    assert r1.tokens.shape == (2, 2)
+    assert ex.swaps.swap_count == 1
+    r2 = ex.run_batch("small", prompts, [2, 3])
+    assert ex.swaps.swap_count == 1  # resident
+    ex.run_batch("big", prompts, [4, 5])
+    assert ex.swaps.swap_count == 2
+
+
+def test_edge_server_end_to_end_grouped_beats_lo():
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=4)
+
+    def run(policy_name, sc):
+        pol = make_policy(policy_name)
+        srv = EdgeServer(apps, pol, sneakpeeks=sneaks if (pol.data_aware or sc) else None,
+                         short_circuit=sc)
+        reqs_c = [Request(r.rid, r.app, r.arrival_s, r.deadline_s, r.features, r.true_label)
+                  for r in reqs]
+        _, stats = srv.run(reqs_c)
+        return stats
+
+    s_lo = run("LO-EDF", False)
+    s_sp = run("SneakPeek", True)
+    assert s_sp.requests == s_lo.requests == 12
+    assert s_sp.mean_utility > s_lo.mean_utility
+
+
+def test_edge_server_executes_schedules_on_models():
+    cfg_s = ARCHS["mamba2-130m"].reduced()
+    cfg_b = ARCHS["tinyllama-1.1b"].reduced()
+    models = [
+        ModelProfile("small", recalls=np.array([0.7, 0.7]), latency_s=0.01, load_latency_s=0.01),
+        ModelProfile("big", recalls=np.array([0.9, 0.9]), latency_s=0.05, load_latency_s=0.05),
+    ]
+    app = Application(name="lm", models=models, penalty="sigmoid")
+    ex = LMExecutor({"small": (cfg_s, 0), "big": (cfg_b, 1)}, new_tokens=2)
+    rng = np.random.default_rng(0)
+
+    def prompt_fn(r):
+        return rng.integers(0, cfg_s.vocab_size, 8).astype(np.int32)
+
+    srv = EdgeServer({"lm": app}, make_policy("Grouped"), executor=ex, prompt_fn=prompt_fn)
+    reqs = [Request(rid=i, app="lm", arrival_s=0.01 * i, deadline_s=0.5, true_label=0)
+            for i in range(4)]
+    outs, stats = srv.run(reqs)
+    assert stats.requests == 4
+    reports = [rep for o in outs for rep in (o["reports"] or [])]
+    assert sum(r.batch_size for r in reports) == 4
+    assert all(r.tokens.shape[1] == 2 for r in reports)
+
+
+def test_lm_profiles_fallback_latency_model():
+    """Without dry-run artifacts, analytic latencies are produced and sane."""
+    fixed, per_item = lm_latency_model("/nonexistent", "tinyllama-1.1b")
+    assert fixed > 0 and per_item >= 0
+    prof = lm_profile("/nonexistent", "gemma-7b", recalls=[0.9, 0.8])
+    assert prof.latency(4) > prof.latency(1)
+    assert prof.load_latency_s > 0
+
+
+def test_lm_profiles_from_dryrun_artifacts():
+    """When the dry-run matrix exists, profiles derive from roofline terms."""
+    import pathlib
+    results = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not (results / "tinyllama-1.1b__decode_32k__pod.json").exists():
+        pytest.skip("dry-run artifacts not built yet")
+    f1, p1 = lm_latency_model(results, "tinyllama-1.1b")
+    f2, p2 = lm_latency_model(results, "gemma-7b")
+    assert f2 > f1  # bigger model, slower
