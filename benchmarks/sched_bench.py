@@ -1,0 +1,145 @@
+"""Scheduling-throughput benchmark: scalar reference vs vectorized fast path.
+
+    PYTHONPATH=src python -m benchmarks.sched_bench [--quick]
+        [--sizes 64,256,1024,4096] [--policies SneakPeek,...]
+        [--out BENCH_sched.json]
+
+For every (window size, policy) cell this times one full scheduling pass —
+the work the paper requires to finish inside the 100 ms window — under the
+original scalar implementation (``make_policy(name, fastpath=False)``) and
+the array-programmed fast path (repro.core.fastpath), reporting
+scheduled-requests/sec for both.  SneakPeek evidence (theta posteriors) is
+attached once outside the timed region: the benchmark isolates scheduling,
+not the SneakPeek inference stage.
+
+Writes ``BENCH_sched.json`` at the repo root (plus a copy under
+results/benchmarks/) and prints a table.  The SneakPeek x 1024-request
+cell is the acceptance gate: the fast path must exceed 5x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core import POLICY_NAMES, evaluate, make_policy
+from repro.core.sneakpeek import attach_sneakpeek
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def build_window(n_requests: int, seed: int = 0):
+    """One synthetic window of ~n_requests across the paper's three apps,
+    with SneakPeek posteriors attached (outside the timed region)."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    per_app = max(1, n_requests // len(APP_SPECS))
+    reqs = make_requests(
+        list(APP_SPECS.values()), per_app=per_app, mean_deadline_s=0.15, seed=seed
+    )
+    attach_sneakpeek(reqs, apps, sneaks)
+    return reqs, apps
+
+
+def time_schedule(policy, reqs, apps, now: float = 0.1,
+                  min_time_s: float = 0.2, max_reps: int = 50) -> float:
+    """Best-of wall time of one scheduling pass (at least one rep, more
+    until ``min_time_s`` total for timer stability)."""
+    times, total = [], 0.0
+    while total < min_time_s and len(times) < max_reps:
+        t0 = time.perf_counter()
+        policy.schedule(reqs, apps, now)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        total += dt
+    return min(times)
+
+
+def run(sizes, policies, min_time_s=0.2):
+    rows = []
+    for n in sizes:
+        reqs, apps = build_window(n)
+        actual_n = len(reqs)
+        for name in policies:
+            fast = make_policy(name)
+            slow = make_policy(name, fastpath=False)
+            t_fast = time_schedule(fast, reqs, apps, min_time_s=min_time_s)
+            t_slow = time_schedule(slow, reqs, apps, min_time_s=min_time_s)
+            # Sanity: both paths must deliver the same mean utility.
+            u_fast = evaluate(fast.schedule(reqs, apps, 0.1), apps, 0.1).mean_utility
+            u_slow = evaluate(slow.schedule(reqs, apps, 0.1), apps, 0.1).mean_utility
+            row = {
+                "policy": name,
+                "requests": actual_n,
+                "scalar_s": t_slow,
+                "fast_s": t_fast,
+                "scalar_rps": actual_n / t_slow,
+                "fast_rps": actual_n / t_fast,
+                "speedup": t_slow / t_fast,
+                "mean_utility_fast": u_fast,
+                "mean_utility_scalar": u_slow,
+            }
+            rows.append(row)
+            print(
+                f"[n={actual_n:5d}] {name:12s} scalar {row['scalar_rps']:10.0f} rps"
+                f" | fast {row['fast_rps']:10.0f} rps | speedup {row['speedup']:6.2f}x",
+                flush=True,
+            )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small sizes, fewer reps")
+    ap.add_argument("--sizes", type=str, default="")
+    ap.add_argument("--policies", type=str, default="")
+    ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_sched.json"))
+    args = ap.parse_args()
+
+    sizes = (
+        [int(s) for s in args.sizes.split(",") if s]
+        or ([64, 256] if args.quick else [64, 256, 1024, 4096])
+    )
+    policies = [p for p in args.policies.split(",") if p] or list(POLICY_NAMES)
+    min_time_s = 0.05 if args.quick else 0.2
+
+    rows = run(sizes, policies, min_time_s=min_time_s)
+
+    gate = [
+        r for r in rows
+        if r["policy"] == "SneakPeek" and abs(r["requests"] - 1024) <= len(APP_SPECS)
+    ]
+    payload = {
+        "benchmark": "sched_bench",
+        "units": "scheduled-requests/sec (one full window pass)",
+        "host": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+        },
+        "sizes": sizes,
+        "policies": policies,
+        "results": rows,
+        "sneakpeek_1024_speedup": gate[0]["speedup"] if gate else None,
+    }
+    out = Path(args.out)
+    out.write_text(json.dumps(payload, indent=2, default=float))
+    if out == ROOT / "BENCH_sched.json":
+        # Mirror only the canonical root artifact: ad-hoc --out runs must
+        # not overwrite the committed results copy with partial sweeps.
+        copy = ROOT / "results" / "benchmarks" / "BENCH_sched.json"
+        copy.parent.mkdir(parents=True, exist_ok=True)
+        copy.write_text(out.read_text())
+    print(f"\nwrote {out}")
+    if gate:
+        sp = gate[0]["speedup"]
+        status = "PASS" if sp >= 5.0 else "FAIL"
+        print(f"SneakPeek @1024 speedup: {sp:.2f}x (target >= 5x) [{status}]")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,8 +28,16 @@ def _score_plan(
     apps: Mapping[str, Application],
     now: float,
     acc_mode: str,
+    arrays=None,
 ) -> float:
-    """Mean estimated utility of an ordered (request, model, batch_id) plan."""
+    """Mean estimated utility of an ordered (request, model, batch_id) plan.
+
+    ``arrays`` (a ``fastpath.WindowArrays``) replaces the per-plan accuracy
+    recomputation with the window's memoized, bit-exact estimates: the
+    solver enumerates |A|! * prod|M_a| candidate plans but only R * M
+    distinct (request, model) accuracies exist.  Timing and accumulation
+    stay scalar so candidate ranking is unchanged down to the last bit.
+    """
     tl = WorkerTimeline(now)
     total = 0.0
     i = 0
@@ -50,7 +58,10 @@ def _score_plan(
         start, completion = tl.run_batch(profile, len(members))
         lat = completion - start
         for r, _, _ in members:
-            acc = estimate_accuracy(r, app, profile, acc_mode)
+            if arrays is not None:
+                acc = arrays.exact_accuracy(r, profile, acc_mode)
+            else:
+                acc = estimate_accuracy(r, app, profile, acc_mode)
             total += eq2_utility(acc, r.deadline_s, start, lat, app.penalty_fn)
         i = j + 1
     return total / max(1, n)
@@ -70,11 +81,13 @@ def brute_force_requests(
     now: float,
     acc_mode: str = "profiled",
     max_candidates: int = 2_000_000,
+    arrays=None,
 ) -> Schedule:
     """Exact solution of Eq. 3 at request granularity.
 
     Raises ValueError when the candidate count exceeds ``max_candidates``
-    (the caller should fall back to a heuristic).
+    (the caller should fall back to a heuristic).  ``arrays`` is an
+    optional ``fastpath.WindowArrays`` accuracy memo (see ``_score_plan``).
     """
     n = len(requests)
     model_sets = [apps[r.app].models for r in requests]
@@ -92,7 +105,7 @@ def brute_force_requests(
         ordered = [requests[i] for i in perm]
         for choice in itertools.product(*[ [m.name for m in apps[r.app].models] for r in ordered ]):
             plan = [(r, m, -1) for r, m in zip(ordered, choice)]
-            u = _score_plan(plan, apps, now, acc_mode)
+            u = _score_plan(plan, apps, now, acc_mode, arrays=arrays)
             if u > best_u:
                 best_u, best_plan = u, plan
     sched = _plan_to_schedule(best_plan)
@@ -106,12 +119,14 @@ def brute_force_groups(
     now: float,
     acc_mode: str = "profiled",
     max_candidates: int = 500_000,
+    arrays=None,
 ) -> Schedule:
     """Exact group-level solution (Alg. 1 fast path).
 
     Enumerates group orderings x one variant per group; members within a
     group run as one batch, ordered by deadline (earliest first) for the
-    per-request utility accounting.
+    per-request utility accounting.  ``arrays`` is an optional
+    ``fastpath.WindowArrays`` accuracy memo (see ``_score_plan``).
     """
     keys = sorted(groups.keys())
     count = 1.0
@@ -133,7 +148,7 @@ def brute_force_groups(
             for b, (k, m) in enumerate(zip(perm, choice)):
                 members = sorted(groups[k], key=lambda r: (r.deadline_s, r.rid))
                 plan.extend((r, m, b) for r in members)
-            u = _score_plan(plan, apps, now, acc_mode)
+            u = _score_plan(plan, apps, now, acc_mode, arrays=arrays)
             if u > best_u:
                 best_u, best_plan = u, plan
     sched = _plan_to_schedule(best_plan)

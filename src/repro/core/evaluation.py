@@ -30,7 +30,6 @@ import numpy as np
 
 from repro.core.accuracy import ModelProfile, expected_accuracy
 from repro.core.types import Application, Request, Schedule, ScheduleEntry
-from repro.core.utility import utility as eq2_utility
 
 __all__ = ["WorkerTimeline", "estimate_accuracy", "evaluate", "EvalResult"]
 
@@ -50,6 +49,8 @@ class WorkerTimeline:
         # single-slot residency (swap whenever the model changes), the
         # paper's conservative default.
         self._resident: list[str] = list(resident)
+        # Model byte sizes for capacity eviction; filled by register_sizes.
+        self._profiles: dict[str, int] = {}
 
     def _is_resident(self, name: str) -> bool:
         return name in self._resident
@@ -65,18 +66,27 @@ class WorkerTimeline:
         if self.capacity is None:
             self._resident = [name]
         else:
+            # Byte sizes come from the profile unless register_sizes
+            # overrode them; profiles without memory_bytes contribute 0
+            # (eviction then never fires — effectively unlimited memory).
+            self._profiles.setdefault(name, profile.memory_bytes)
             self._resident.append(name)
-            # NOTE: eviction accounting uses entry count when byte sizes are
-            # unavailable; profiles with memory_bytes participate in byte math.
             while len(self._resident) > 1 and self._bytes() > self.capacity:
                 self._resident.pop(0)
         return swap
 
     def _bytes(self) -> int:
-        return sum(self._profiles.get(n, 0) for n in self._resident) if hasattr(self, "_profiles") else 0
+        return sum(self._profiles.get(n, 0) for n in self._resident)
 
     def register_sizes(self, sizes: Mapping[str, int]) -> None:
         self._profiles = dict(sizes)
+
+    def swap_vector(self, names: Sequence[str], swaps: np.ndarray) -> np.ndarray:
+        """(M,) swap latencies peek_batch would charge each model if it ran
+        next — the batched counterpart the fast path scores Eq. 13 with."""
+        return np.array(
+            [0.0 if self._is_resident(n) else s for n, s in zip(names, swaps)]
+        )
 
     def peek_batch(self, profile: ModelProfile, batch_size: int) -> tuple[float, float]:
         """(start, completion) if a batch ran next, WITHOUT committing."""
@@ -141,8 +151,6 @@ def evaluate(
     if not entries:
         return EvalResult(0.0, np.zeros(0), np.zeros(0), np.zeros(0), np.zeros(0), 0, 0.0)
     workers: dict[int, WorkerTimeline] = {}
-    utilities, completions, deadlines, accs = [], [], [], []
-    violations, violation_time = 0, 0.0
 
     # Group consecutive same-batch entries per worker.
     batches: list[list[ScheduleEntry]] = []
@@ -158,34 +166,30 @@ def evaluate(
         else:
             batches.append([e])
 
+    # Eq. 1 replay: sequential per-worker timing (stateful, cheap) ...
     for batch in batches:
         w = batch[0].worker
         if w not in workers:
             workers[w] = WorkerTimeline(now, memory_capacity_bytes)
-        app = apps[batch[0].request.app]
-        profile = app.model(batch[0].model)
+        profile = apps[batch[0].request.app].model(batch[0].model)
         start, completion = workers[w].run_batch(profile, len(batch))
         for e in batch:
             e.est_start_s = start
             e.est_latency_s = completion - start
-            r = e.request
-            acc = estimate_accuracy(r, app, profile, acc_mode)
-            u = eq2_utility(acc, r.deadline_s, start, completion - start, app.penalty_fn)
-            utilities.append(u)
-            completions.append(completion)
-            deadlines.append(r.deadline_s)
-            accs.append(acc)
-            if completion > r.deadline_s:
-                violations += 1
-                violation_time += completion - r.deadline_s
 
-    u = np.asarray(utilities)
+    # ... then batched Eq. 9 accuracy estimation + Eq. 2 scoring over the
+    # whole schedule at once (repro.core.fastpath precomputed matrices).
+    from repro.core.fastpath import score_entries
+
+    accs, utilities, completions, deadlines = score_entries(entries, apps, acc_mode)
+    over = completions - deadlines
+    missed = over > 0
     return EvalResult(
-        mean_utility=float(u.mean()),
-        utilities=u,
-        completions=np.asarray(completions),
-        deadlines=np.asarray(deadlines),
-        accuracies=np.asarray(accs),
-        violations=violations,
-        violation_time_s=violation_time,
+        mean_utility=float(utilities.mean()),
+        utilities=utilities,
+        completions=completions,
+        deadlines=deadlines,
+        accuracies=accs,
+        violations=int(missed.sum()),
+        violation_time_s=float(over[missed].sum()),
     )

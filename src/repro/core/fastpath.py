@@ -1,0 +1,564 @@
+"""Vectorized scheduling fast path: the paper's equations as array programs.
+
+The scalar scheduler (priority.py / selection.py / grouping.py) recomputes
+``app.accuracies(theta)`` and the penalty function once per (request, model)
+pair — O(R * M) Python calls per window.  This module precomputes a
+``WindowArrays`` bundle once per window and evaluates the paper's equations
+as a handful of batched numpy (optionally Pallas) operations:
+
+  * Eq. 9  — sharpened accuracies for ALL (request, model) pairs of an
+             application as one matmul ``Theta @ R.T`` over the per-app
+             recall matrix ``R[models, classes]``.
+  * Eq. 2  — array-valued penalty/utility over (request, model) matrices
+             (the penalties in repro.core.utility are ufunc-like).
+  * Eq. 12 — priorities for the whole window: row-variance of the accuracy
+             matrix plus a vectorized exp over time-to-deadline.
+  * Eq. 13/14 — group utilities as masked row-means + argmax with the same
+             (utility, -latency, name) tie-breaking as the scalar path.
+
+``fast_per_request_schedule`` and ``fast_grouped_schedule`` mirror the
+scalar implementations decision-for-decision (same selections, orderings
+and batch structure; utilities agree to ~1e-15), so the scalar modules can
+delegate here by default while remaining available as references — see
+tests/test_fastpath.py for the parity suite and benchmarks/sched_bench.py
+for the measured speedups.
+
+The batched Eq. 2 scoring can optionally run through the Pallas utility
+kernel (repro.kernels.utility) — ``set_utility_backend("pallas")`` — with
+numpy as the default and fallback backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.accuracy import ModelProfile
+from repro.core.types import Application, Request, Schedule, ScheduleEntry
+from repro.core.utility import PENALTIES
+
+__all__ = [
+    "AppArrays",
+    "WindowArrays",
+    "set_utility_backend",
+    "get_utility_backend",
+    "utility_matrix",
+    "fast_per_request_schedule",
+    "fast_grouped_schedule",
+]
+
+_UTILITY_BACKEND = "numpy"
+
+
+def set_utility_backend(name: str) -> None:
+    """Select the batched Eq. 2 scoring backend: "numpy" (default) or
+    "pallas" (the repro.kernels.utility kernel, interpret-mode on CPU)."""
+    global _UTILITY_BACKEND
+    if name not in ("numpy", "pallas"):
+        raise ValueError(f"unknown utility backend {name!r}")
+    _UTILITY_BACKEND = name
+
+
+def get_utility_backend() -> str:
+    return _UTILITY_BACKEND
+
+
+def utility_matrix(
+    acc: np.ndarray,
+    deadlines: np.ndarray,
+    completions: np.ndarray,
+    penalty: str,
+    backend: str | None = None,
+) -> np.ndarray:
+    """Eq. 2 over a (requests, models) tile: acc * (1 - clip(gamma(d, e))).
+
+    ``deadlines`` broadcasts over rows and ``completions`` over columns
+    (or pass full matrices).  ``backend=None`` uses the module setting.
+    """
+    backend = backend or _UTILITY_BACKEND
+    if backend == "pallas":
+        try:
+            from repro.kernels.utility.ops import utility_scores
+        except ImportError:  # no JAX/Pallas on this host: numpy fallback
+            backend = "numpy"
+        else:
+            shape = np.broadcast_shapes(
+                np.shape(acc), np.shape(deadlines), np.shape(completions)
+            )
+            if shape == ():  # degenerate scalar call: no tile to score
+                backend = "numpy"
+            else:
+                A = np.broadcast_to(np.asarray(acc, np.float64), shape)
+                D = np.broadcast_to(np.asarray(deadlines, np.float64), shape)
+                E = np.broadcast_to(np.asarray(completions, np.float64), shape)
+                m = shape[-1]
+                if len(shape) > 1 and np.all(D == D[..., :1]):
+                    # Deadlines constant along the model axis (the Eq. 13
+                    # tile shape): one kernel row per request.
+                    a2 = A.reshape(-1, m)
+                    e2 = E.reshape(-1, m)
+                    d2 = D.reshape(-1, m)[:, 0]
+                else:
+                    # Elementwise vectors (evaluate's per-entry scoring) or
+                    # fully general deadline matrices: flatten to a column
+                    # tile, each row with its own deadline.
+                    a2, d2, e2 = A.reshape(-1, 1), D.reshape(-1), E.reshape(-1, 1)
+                u, _ = utility_scores(a2, d2, e2, penalty=penalty)
+                return np.asarray(u, np.float64).reshape(shape)
+    g = PENALTIES[penalty](deadlines, completions)
+    return np.asarray(acc, np.float64) * (1.0 - np.clip(g, 0.0, 1.0))
+
+
+# --------------------------------------------------------------------------
+# Precomputed per-application model arrays
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AppArrays:
+    """Model-side arrays of one application, shared by every window."""
+
+    app: Application
+    R: np.ndarray  # (M, C) per-class recalls — the model term of Eq. 9
+    profiled: np.ndarray  # (M,) profiled accuracies (Eq. 9 with test theta)
+    sc: np.ndarray  # (M,) bool — short-circuit variants (always profiled)
+    latency_s: np.ndarray  # (M,) single-request latency (tie-break key)
+    lat1: np.ndarray  # (M,) l(m, 1)
+    lat_fixed: np.ndarray  # (M,) affine batch-latency intercept
+    lat_item: np.ndarray  # (M,) affine batch-latency slope
+    swap: np.ndarray  # (M,) model-load (swap) latency
+    names: list[str]
+    name_to_idx: dict[str, int]
+    # Model indices sorted by descending (-latency_s, name): among
+    # utility ties, argmax over U[:, tie_pref] picks exactly the model the
+    # scalar key (u, -latency_s, name) would.
+    tie_pref: np.ndarray
+
+    @classmethod
+    def build(cls, app: Application) -> "AppArrays":
+        models = app.models
+        R = np.stack([m.recalls for m in models])
+        lat_s = np.array([m.latency_s for m in models])
+        lat_fixed = np.array(
+            [0.0 if m.latency_model is None else m.latency_model[0] for m in models]
+        )
+        lat_item = np.array(
+            [m.latency_s if m.latency_model is None else m.latency_model[1] for m in models]
+        )
+        names = [m.name for m in models]
+        pref = sorted(
+            range(len(models)), key=lambda i: (-lat_s[i], names[i]), reverse=True
+        )
+        return cls(
+            app=app,
+            R=R,
+            profiled=np.array([m.profiled_accuracy() for m in models]),
+            sc=np.array([m.is_short_circuit for m in models], dtype=bool),
+            latency_s=lat_s,
+            lat1=np.array([m.latency(1) for m in models]),
+            lat_fixed=lat_fixed,
+            lat_item=lat_item,
+            swap=np.array([m.load_latency_s for m in models]),
+            names=names,
+            name_to_idx={n: i for i, n in enumerate(names)},
+            tie_pref=np.asarray(pref, dtype=np.int64),
+        )
+
+    @classmethod
+    def of(cls, app: Application) -> "AppArrays":
+        """Memoized build: the arrays depend only on the Application, so
+        they are cached on the instance and shared by every window (and
+        every evaluate() call).  ``dataclasses.replace`` — how apps gain
+        short-circuit variants — produces a fresh object, missing the
+        cache naturally; the variant-count guard catches in-place
+        ``models`` mutation."""
+        cached = getattr(app, "_fastpath_arrays", None)
+        if cached is None or cached.app is not app or len(cached.names) != len(app.models):
+            cached = cls.build(app)
+            app._fastpath_arrays = cached
+        return cached
+
+    def batch_latency(self, batch_size: int) -> np.ndarray:
+        """l(m, b) for every variant."""
+        return self.lat_fixed + self.lat_item * batch_size
+
+    def argbest(self, utilities: np.ndarray) -> int:
+        """argmax_m with the scalar tie-break key (u, -latency_s, name)."""
+        pref = self.tie_pref
+        return int(pref[int(np.argmax(np.asarray(utilities)[pref]))])
+
+
+# --------------------------------------------------------------------------
+# Per-window precompute
+# --------------------------------------------------------------------------
+
+
+class WindowArrays:
+    """All per-window request matrices the batched equations consume.
+
+    Built once per scheduling window; accuracy matrices (per acc mode) and
+    the priority vector are computed lazily and cached.
+    """
+
+    def __init__(
+        self,
+        requests: Sequence[Request],
+        apps: Mapping[str, Application],
+        now: float,
+    ):
+        self.requests = list(requests)
+        self.apps = apps
+        self.now = float(now)
+        n = len(self.requests)
+        self.deadlines = np.array([r.deadline_s for r in self.requests])
+        self.arrivals = np.array([r.arrival_s for r in self.requests])
+        self.rids = np.array([r.rid for r in self.requests])
+        self.app_of = [r.app for r in self.requests]
+        # Per-app request partitions.
+        self.req_idx: dict[str, np.ndarray] = {}
+        self.row_of = np.zeros(n, dtype=np.int64)  # position within the app block
+        self._pos = {id(r): i for i, r in enumerate(self.requests)}
+        by_app: dict[str, list[int]] = {}
+        for i, r in enumerate(self.requests):
+            by_app.setdefault(r.app, []).append(i)
+        self.app_arrays: dict[str, AppArrays] = {}
+        self._theta_rows: dict[str, np.ndarray] = {}
+        self._theta_mat: dict[str, np.ndarray] = {}
+        self._label_rows: dict[str, np.ndarray] = {}
+        self._labels: dict[str, np.ndarray] = {}
+        for app_name, idx_list in by_app.items():
+            idx = np.asarray(idx_list, dtype=np.int64)
+            self.req_idx[app_name] = idx
+            self.row_of[idx] = np.arange(len(idx))
+            self.app_arrays[app_name] = AppArrays.of(apps[app_name])
+            t_rows, thetas, l_rows, labels = [], [], [], []
+            for row, i in enumerate(idx_list):
+                r = self.requests[i]
+                if r.theta is not None:
+                    t_rows.append(row)
+                    thetas.append(np.asarray(r.theta, dtype=np.float64))
+                if r.true_label is not None:
+                    l_rows.append(row)
+                    labels.append(int(r.true_label))
+            self._theta_rows[app_name] = np.asarray(t_rows, dtype=np.int64)
+            self._theta_mat[app_name] = (
+                np.stack(thetas) if thetas else np.zeros((0, apps[app_name].num_classes))
+            )
+            self._label_rows[app_name] = np.asarray(l_rows, dtype=np.int64)
+            self._labels[app_name] = np.asarray(labels, dtype=np.int64)
+        self._acc_cache: dict[tuple[str, str], np.ndarray] = {}
+        self._prio_cache: dict[bool, np.ndarray] = {}
+        self._exact_acc: dict[tuple[int, str, str], float] = {}  # id(req)-keyed
+
+    def index_of(self, request: Request) -> int:
+        """Window position of a request (identity-based, rids may repeat)."""
+        return self._pos[id(request)]
+
+    def rows_of(self, requests: Sequence[Request]) -> np.ndarray:
+        """Window positions for a request subset (e.g. one group)."""
+        return np.asarray([self._pos[id(r)] for r in requests], dtype=np.int64)
+
+    # -- Eq. 9 ------------------------------------------------------------
+    def acc_matrix(self, app_name: str, mode: str) -> np.ndarray:
+        """(R_app, M) accuracy estimates for every request of the app.
+
+        "sharpened" rows with a posterior are one batched ``Theta @ R.T``
+        matmul; rows without theta and short-circuit columns stay profiled,
+        exactly mirroring ``evaluation.estimate_accuracy``.
+        """
+        key = (app_name, mode)
+        cached = self._acc_cache.get(key)
+        if cached is not None:
+            return cached
+        aa = self.app_arrays[app_name]
+        n = len(self.req_idx[app_name])
+        A = np.tile(aa.profiled, (n, 1))
+        if mode == "profiled":
+            pass
+        elif mode == "sharpened":
+            rows = self._theta_rows[app_name]
+            if rows.size:
+                S = self._theta_mat[app_name] @ aa.R.T  # Eq. 9, batched
+                if aa.sc.any():
+                    S[:, aa.sc] = aa.profiled[aa.sc]
+                A[rows] = S
+        elif mode == "oracle":
+            rows = self._label_rows[app_name]
+            if rows.size:
+                S = aa.R.T[self._labels[app_name]]  # per-class recall gather
+                if aa.sc.any():
+                    S = S.copy()
+                    S[:, aa.sc] = aa.profiled[aa.sc]
+                A[rows] = S
+        else:
+            raise ValueError(f"unknown accuracy mode {mode!r}")
+        self._acc_cache[key] = A
+        return A
+
+    def acc_row(self, request: Request, mode: str) -> np.ndarray:
+        """(M,) accuracy estimates of one request against its app's variants."""
+        i = self.index_of(request)
+        return self.acc_matrix(request.app, mode)[self.row_of[i]]
+
+    def exact_accuracy(self, request: Request, profile: ModelProfile, mode: str) -> float:
+        """Bit-exact, memoized ``evaluation.estimate_accuracy`` — used where
+        scalar-path reproducibility matters more than matmul batching (the
+        brute-force solvers compare astronomically many near-tied plans)."""
+        key = (id(request), profile.name, mode)
+        a = self._exact_acc.get(key)
+        if a is None:
+            from repro.core.evaluation import estimate_accuracy
+
+            a = estimate_accuracy(request, self.apps[request.app], profile, mode)
+            self._exact_acc[key] = a
+        return a
+
+    # -- Eq. 12 -----------------------------------------------------------
+    def priorities(self, data_aware: bool = False) -> np.ndarray:
+        """(R,) request priorities: (1 + Var[Accuracy(M_a)]) * exp(-d)."""
+        cached = self._prio_cache.get(data_aware)
+        if cached is not None:
+            return cached
+        mode = "sharpened" if data_aware else "profiled"
+        p = np.zeros(len(self.requests))
+        for app_name, idx in self.req_idx.items():
+            A = self.acc_matrix(app_name, mode)
+            var = A.var(axis=1) if A.shape[1] > 1 else np.zeros(A.shape[0])
+            d = np.maximum(self.deadlines[idx] - self.now, -60.0)
+            p[idx] = (1.0 + var) * np.exp(-d)
+        self._prio_cache[data_aware] = p
+        return p
+
+    # -- orderings --------------------------------------------------------
+    def order_indices(self, ordering: str, data_aware: bool = False) -> np.ndarray:
+        """Window order as indices into ``requests`` (FCFS/EDF/priority)."""
+        if ordering == "fcfs":
+            return np.lexsort((self.rids, self.arrivals))
+        if ordering == "edf":
+            return np.lexsort((self.rids, self.deadlines))
+        if ordering == "priority":
+            return np.lexsort((self.rids, -self.priorities(data_aware)))
+        raise ValueError(f"unknown ordering {ordering!r}")
+
+
+# --------------------------------------------------------------------------
+# Fast per-request policies (MaxAcc / locally-optimal + FCFS/EDF/priority)
+# --------------------------------------------------------------------------
+
+
+def fast_per_request_schedule(
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    now: float,
+    ordering: str = "edf",
+    selection: str = "locally_optimal",
+    data_aware: bool = False,
+    arrays: WindowArrays | None = None,
+) -> Schedule:
+    """Vectorized equivalent of ``SchedulerPolicy._per_request_schedule``.
+
+    Ordering and accuracy estimation (Eq. 9) are fully batched.  The
+    locally-optimal selection is sequential by nature — each choice shifts
+    the queue-tail time and model residency for the next — so the per-step
+    scoring runs as a tight scalar loop over the PRECOMPUTED accuracy rows:
+    at M ~ a handful of variants, per-step ndarray dispatch costs more than
+    it saves, while the batched matmul has already paid for the accuracy
+    estimates (the scalar path's dominant cost).
+    """
+    if not requests:
+        return Schedule()
+    acc_mode = "sharpened" if data_aware else "profiled"
+    wa = arrays if arrays is not None else WindowArrays(requests, apps, now)
+    order = wa.order_indices(ordering, data_aware)
+
+    max_acc_choice: dict[str, np.ndarray] = {}
+    acc_rows: dict[str, list[list[float]]] = {}
+    if selection == "max_accuracy":
+        # Deadline-oblivious: argmax over the accuracy matrix, whole window
+        # at once (tie key (acc, -latency, name) via the tie_pref gather).
+        for app_name in wa.req_idx:
+            aa = wa.app_arrays[app_name]
+            A = wa.acc_matrix(app_name, acc_mode)
+            pref = aa.tie_pref
+            max_acc_choice[app_name] = pref[np.argmax(A[:, pref], axis=1)]
+    elif selection == "locally_optimal":
+        acc_rows = {
+            app_name: wa.acc_matrix(app_name, acc_mode).tolist()
+            for app_name in wa.req_idx
+        }
+    else:
+        raise ValueError(f"unknown selection {selection!r}")
+
+    # Plain-float model tables (ndarray scalar extraction is slow in loops).
+    tables = {}
+    for app_name, aa in wa.app_arrays.items():
+        tables[app_name] = (
+            aa.names,
+            aa.swap.tolist(),
+            aa.lat1.tolist(),
+            aa.latency_s.tolist(),
+            aa.app.penalty_fn,
+        )
+
+    entries: list[ScheduleEntry] = []
+    t = float(now)
+    resident: str | None = None  # single-slot residency (capacity=None)
+    row_of = wa.row_of
+    for k, g in enumerate(order):
+        g = int(g)
+        r = wa.requests[g]
+        app_name = wa.app_of[g]
+        names, swaps, lat1s, lat_ss, penalty_fn = tables[app_name]
+        if selection == "max_accuracy":
+            sel = int(max_acc_choice[app_name][row_of[g]])
+        else:
+            # Eq. 13 at the queue tail with the scalar tie-break key
+            # (u, -latency, name); accuracies come from the Eq. 9 matmul.
+            row = acc_rows[app_name][row_of[g]]
+            deadline = r.deadline_s
+            sel, best_key = 0, None
+            for m_i in range(len(names)):
+                completion = t + (0.0 if resident == names[m_i] else swaps[m_i]) + lat1s[m_i]
+                gam = penalty_fn(deadline, completion)
+                u = row[m_i] * (1.0 - min(1.0, max(0.0, gam)))
+                key = (u, -lat_ss[m_i], names[m_i])
+                if best_key is None or key > best_key:
+                    sel, best_key = m_i, key
+        start = t
+        t = start + (0.0 if resident == names[sel] else swaps[sel]) + lat1s[sel]
+        resident = names[sel]
+        entries.append(
+            ScheduleEntry(
+                request=r,
+                model=names[sel],
+                order=k + 1,
+                batch_id=-1,
+                est_start_s=start,
+                est_latency_s=t - start,
+            )
+        )
+    sched = Schedule(entries=entries)
+    sched.validate()
+    return sched
+
+
+# --------------------------------------------------------------------------
+# Fast grouped scheduling (Algorithm 1 + §V-C2 splitting)
+# --------------------------------------------------------------------------
+
+
+def fast_grouped_schedule(
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    now: float,
+    tau: int = 3,
+    data_aware: bool = False,
+    split_by_label: bool = False,
+    acc_mode: str | None = None,
+) -> Schedule:
+    """Vectorized Algorithm 1, mirroring ``grouping.grouped_schedule``.
+
+    Group priorities are means over slices of the window priority vector
+    (Eq. 14); the per-group variant choice is one (members x models)
+    utility matrix + column means + argmax (Eq. 13).  The brute-force
+    branch delegates to the exact scalar solver, feeding it the window's
+    memoized accuracies so it stays bit-identical while dropping its
+    O(candidates x requests) accuracy recomputation.
+    """
+    from repro.core.bruteforce import brute_force_groups
+    from repro.core.evaluation import WorkerTimeline
+    from repro.core.grouping import group_by_app, split_groups_by_label
+    from repro.core.selection import group_locally_optimal
+
+    if not requests:
+        return Schedule()
+    if acc_mode is None:
+        acc_mode = "sharpened" if data_aware else "profiled"
+
+    groups = group_by_app(requests)
+    if split_by_label:
+        groups = split_groups_by_label(groups, apps)
+
+    wa = WindowArrays(requests, apps, now)
+
+    if len(groups) <= tau:
+        try:
+            return brute_force_groups(groups, apps, now, acc_mode=acc_mode, arrays=wa)
+        except ValueError:
+            pass  # too many (group-ordering x model) candidates; fall through
+
+    prio = wa.priorities(data_aware)
+    member_idx = {key: wa.rows_of(members) for key, members in groups.items()}
+    gp = {key: float(np.mean(prio[member_idx[key]])) for key in groups}  # Eq. 14
+
+    ordered_groups = sorted(groups.items(), key=lambda item: (-gp[item[0]], item[0]))
+    # Beyond-paper refinement (see grouping.py): keep same-application
+    # subgroups adjacent so label splitting doesn't re-pay the model swap.
+    if split_by_label and len(ordered_groups) > 1:
+        app_rank: dict[str, int] = {}
+        for key, members in ordered_groups:
+            app_rank.setdefault(members[0].app, len(app_rank))
+        ordered_groups.sort(
+            key=lambda item: (app_rank[item[1][0].app], -gp[item[0]])
+        )
+
+    entries: list[ScheduleEntry] = []
+    tl = WorkerTimeline(now)
+    order = 1
+    for batch_id, (key, members) in enumerate(ordered_groups):
+        app = apps[members[0].app]
+        idx = member_idx[key]
+        profile = group_locally_optimal(members, app, tl, acc_mode=acc_mode, arrays=wa)
+        start, completion = tl.run_batch(profile, len(members))
+        member_order = np.lexsort((wa.rids[idx], -prio[idx]))
+        for j in member_order:
+            entries.append(
+                ScheduleEntry(
+                    request=wa.requests[int(idx[int(j)])],
+                    model=profile.name,
+                    order=order,
+                    batch_id=batch_id,
+                    est_start_s=start,
+                    est_latency_s=completion - start,
+                )
+            )
+            order += 1
+    sched = Schedule(entries=entries)
+    sched.validate()
+    return sched
+
+
+# --------------------------------------------------------------------------
+# Vectorized schedule scoring (consumed by evaluation.evaluate)
+# --------------------------------------------------------------------------
+
+
+def score_entries(
+    entries: Sequence[ScheduleEntry],
+    apps: Mapping[str, Application],
+    acc_mode: str,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(accuracies, utilities, completions, deadlines) for replayed entries.
+
+    Each entry's realized start/latency must already be filled in (the
+    timeline replay in ``evaluation.evaluate`` does this).  Accuracy
+    estimation reuses the WindowArrays matrices; Eq. 2 runs once per
+    application as an array op.
+    """
+    n = len(entries)
+    accs = np.zeros(n)
+    utils = np.zeros(n)
+    wa = WindowArrays([e.request for e in entries], apps, now=0.0)
+    completions = np.array([e.est_start_s + e.est_latency_s for e in entries])
+    for app_name, idx in wa.req_idx.items():
+        aa = wa.app_arrays[app_name]
+        A = wa.acc_matrix(app_name, acc_mode)
+        model_cols = np.asarray(
+            [aa.name_to_idx[entries[int(i)].model] for i in idx], dtype=np.int64
+        )
+        a = A[np.arange(len(idx)), model_cols]
+        u = utility_matrix(a, wa.deadlines[idx], completions[idx], aa.app.penalty)
+        accs[idx] = a
+        utils[idx] = u
+    return accs, utils, completions, wa.deadlines

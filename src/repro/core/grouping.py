@@ -77,12 +77,30 @@ def grouped_schedule(
     data_aware: bool = False,
     split_by_label: bool = False,
     acc_mode: str | None = None,
+    use_fastpath: bool = True,
 ) -> Schedule:
     """Algorithm 1 (+ optional §V-C2 splitting when ``split_by_label``).
 
     ``data_aware`` switches both the priority variance term and the
     group-level utility to SneakPeek-sharpened accuracies.
+
+    ``use_fastpath`` (default) delegates to the vectorized implementation
+    in repro.core.fastpath, which consumes one ``WindowArrays`` precompute
+    instead of O(R * M) scalar accuracy/penalty calls; pass False for the
+    scalar reference path (same schedules — see tests/test_fastpath.py).
     """
+    if use_fastpath:
+        from repro.core.fastpath import fast_grouped_schedule
+
+        return fast_grouped_schedule(
+            requests,
+            apps,
+            now,
+            tau=tau,
+            data_aware=data_aware,
+            split_by_label=split_by_label,
+            acc_mode=acc_mode,
+        )
     if not requests:
         return Schedule()
     if acc_mode is None:
@@ -98,12 +116,15 @@ def grouped_schedule(
         except ValueError:
             pass  # too many (group-ordering x model) candidates; fall through
 
-    def gp(item):
-        key, members = item
-        app = apps[members[0].app]
-        return (-group_priority(members, app, now, data_aware), key)
+    # Eq. 14 once per group — sort keys must not recompute the O(|g|)
+    # priority mean on every comparison (and again in the adjacency
+    # re-sort below).
+    gp = {
+        key: group_priority(members, apps[members[0].app], now, data_aware)
+        for key, members in groups.items()
+    }
 
-    ordered_groups = sorted(groups.items(), key=gp)
+    ordered_groups = sorted(groups.items(), key=lambda item: (-gp[item[0]], item[0]))
     # Beyond-paper refinement: keep same-application subgroups ADJACENT
     # (apps ordered by their best subgroup's priority).  Pure priority
     # interleaving makes label-split subgroups alternate across apps and
@@ -114,8 +135,7 @@ def grouped_schedule(
         for key, members in ordered_groups:
             app_rank.setdefault(members[0].app, len(app_rank))
         ordered_groups.sort(
-            key=lambda item: (app_rank[item[1][0].app],
-                              -group_priority(item[1], apps[item[1][0].app], now, data_aware))
+            key=lambda item: (app_rank[item[1][0].app], -gp[item[0]])
         )
 
     tl = WorkerTimeline(now)

@@ -22,7 +22,12 @@ import numpy as np
 
 from repro.core.types import Application, Request
 
-__all__ = ["accuracy_variance", "request_priority", "group_priority"]
+__all__ = [
+    "accuracy_variance",
+    "request_priority",
+    "request_priorities",
+    "group_priority",
+]
 
 
 def accuracy_variance(accuracies: Sequence[float]) -> float:
@@ -38,12 +43,17 @@ def request_priority(
     app: Application,
     now: float,
     data_aware: bool = False,
+    arrays=None,
 ) -> float:
     """Eq. 12.  ``d_i`` is time-to-deadline relative to ``now`` in seconds.
 
     With ``data_aware=True`` and a SneakPeek posterior attached to the
-    request, the variance term uses sharpened accuracies.
+    request, the variance term uses sharpened accuracies.  Passing a
+    ``fastpath.WindowArrays`` bundle makes this a thin lookup into the
+    window's precomputed priority vector.
     """
+    if arrays is not None:
+        return float(arrays.priorities(data_aware)[arrays.index_of(request)])
     theta = request.theta if data_aware else None
     accs = app.accuracies(theta)
     var = accuracy_variance(accs)
@@ -54,15 +64,31 @@ def request_priority(
     return (1.0 + var) * math.exp(-d)
 
 
+def request_priorities(
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    now: float,
+    data_aware: bool = False,
+) -> np.ndarray:
+    """Batched Eq. 12 for a whole window (one matmul + row-variance pass
+    per application) — see repro.core.fastpath."""
+    from repro.core.fastpath import WindowArrays
+
+    return WindowArrays(requests, apps, now).priorities(data_aware)
+
+
 def group_priority(
     requests: Sequence[Request],
     app: Application,
     now: float,
     data_aware: bool = False,
+    arrays=None,
 ) -> float:
     """Eq. 14: mean of member priorities."""
     if not requests:
         return 0.0
+    if arrays is not None:
+        return float(np.mean(arrays.priorities(data_aware)[arrays.rows_of(requests)]))
     return float(
         np.mean([request_priority(r, app, now, data_aware) for r in requests])
     )

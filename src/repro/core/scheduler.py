@@ -37,6 +37,10 @@ class SchedulerPolicy:
     data_aware: bool = False
     split_by_label: bool = False
     tau: int = 3  # brute-force threshold for grouped scheduling
+    # Vectorized window scheduling (repro.core.fastpath).  False runs the
+    # original scalar loops — kept as the parity/benchmark reference
+    # (``make_policy(name, fastpath=False)``).
+    fastpath: bool = True
 
     def schedule(
         self,
@@ -53,6 +57,18 @@ class SchedulerPolicy:
                 tau=self.tau,
                 data_aware=self.data_aware,
                 split_by_label=self.split_by_label,
+                use_fastpath=self.fastpath,
+            )
+        elif self.fastpath:
+            from repro.core.fastpath import fast_per_request_schedule
+
+            sched = fast_per_request_schedule(
+                requests,
+                apps,
+                now,
+                ordering=self.ordering,
+                selection=self.selection,
+                data_aware=self.data_aware,
             )
         else:
             sched = self._per_request_schedule(requests, apps, now)
@@ -65,6 +81,7 @@ class SchedulerPolicy:
         apps: Mapping[str, Application],
         now: float,
     ) -> Schedule:
+        """Scalar reference path: O(R * M) per-pair estimate/utility calls."""
         acc_mode = "sharpened" if self.data_aware else "profiled"
         order_fn = ORDERINGS[self.ordering]
         select_fn = {

@@ -5,6 +5,12 @@
     deadline-aware selectors of [29], [40], [7].
   * ``max_accuracy`` — MaxAcc baseline: always the highest-(estimated)-
     accuracy variant, deadline-oblivious.
+
+Every selector optionally consumes a precomputed ``fastpath.WindowArrays``
+bundle: the per-pair accuracy/penalty recomputation collapses to one
+vectorized Eq. 2 row (or tile) over the window's accuracy matrix, with the
+same (utility, -latency, name) tie-breaking as the scalar loop.  Without
+``arrays`` the original scalar reference implementation runs.
 """
 from __future__ import annotations
 
@@ -25,12 +31,22 @@ def locally_optimal(
     app: Application,
     timeline: WorkerTimeline,
     acc_mode: str = "profiled",
+    arrays=None,
 ) -> ModelProfile:
     """Eq. 13: the variant maximizing this request's utility if run next.
 
     Ties break toward lower latency (frees budget for later requests),
     then by name for determinism.
     """
+    if arrays is not None:
+        from repro.core.fastpath import utility_matrix
+
+        aa = arrays.app_arrays[app.name]
+        comp = timeline.t + timeline.swap_vector(aa.names, aa.swap) + aa.lat1
+        u = utility_matrix(
+            arrays.acc_row(request, acc_mode), request.deadline_s, comp, app.penalty
+        )
+        return app.models[aa.argbest(u)]
     best, best_u = None, -np.inf
     for m in app.models:
         start, completion = timeline.peek_batch(m, 1)
@@ -47,8 +63,12 @@ def max_accuracy(
     app: Application,
     timeline: WorkerTimeline,
     acc_mode: str = "profiled",
+    arrays=None,
 ) -> ModelProfile:
     """MaxAcc baseline: highest estimated accuracy, ignoring deadlines."""
+    if arrays is not None:
+        aa = arrays.app_arrays[app.name]
+        return app.models[aa.argbest(arrays.acc_row(request, acc_mode))]
     best, best_a = None, -np.inf
     for m in app.models:
         acc = estimate_accuracy(request, app, m, acc_mode)
@@ -62,12 +82,24 @@ def group_locally_optimal(
     app: Application,
     timeline: WorkerTimeline,
     acc_mode: str = "profiled",
+    arrays=None,
 ) -> ModelProfile:
     """Group-level Eq. 13: argmax_m of the *average* member utility if the
     whole group runs next as one batch (Alg. 1 line "solution to eq. 13
     using avg group utility")."""
-    best, best_u = None, -np.inf
     b = len(requests)
+    if arrays is not None:
+        from repro.core.fastpath import utility_matrix
+
+        aa = arrays.app_arrays[app.name]
+        rows = arrays.rows_of(requests)
+        comp = timeline.t + timeline.swap_vector(aa.names, aa.swap) + aa.batch_latency(b)
+        A_g = arrays.acc_matrix(app.name, acc_mode)[arrays.row_of[rows]]
+        U = utility_matrix(
+            A_g, arrays.deadlines[rows][:, None], comp[None, :], app.penalty
+        )
+        return app.models[aa.argbest(U.mean(axis=0))]
+    best, best_u = None, -np.inf
     for m in app.models:
         start, completion = timeline.peek_batch(m, b)
         lat = completion - start

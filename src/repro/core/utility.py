@@ -19,7 +19,7 @@ sigmoid's cap.  This interpretation is recorded in EXPERIMENTS.md.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Union
 
 import numpy as np
 
@@ -27,28 +27,48 @@ __all__ = [
     "step_penalty",
     "linear_penalty",
     "sigmoid_penalty",
+    "no_penalty",
     "PENALTIES",
     "utility",
 ]
 
-PenaltyFn = Callable[[float, float], float]
+# Penalties are ufunc-like: scalars in -> float out (pure-Python branch,
+# keeps the scalar reference path cheap), ndarrays in -> broadcast ndarray
+# out.  The vectorized forms are what the scheduling fast path
+# (repro.core.fastpath) evaluates over whole (request, model) matrices.
+ArrayLike = Union[float, np.ndarray]
+PenaltyFn = Callable[[ArrayLike, ArrayLike], ArrayLike]
 
 
-def step_penalty(deadline: float, completion: float) -> float:
+def _is_array(deadline: ArrayLike, completion: ArrayLike) -> bool:
+    return isinstance(deadline, np.ndarray) or isinstance(completion, np.ndarray)
+
+
+def step_penalty(deadline: ArrayLike, completion: ArrayLike) -> ArrayLike:
     """gamma(d, e) = 1[d < e] — utility zero on any miss."""
-    return 1.0 if deadline < completion else 0.0
+    if not _is_array(deadline, completion):
+        return 1.0 if deadline < completion else 0.0
+    d = np.asarray(deadline, np.float64)
+    e = np.asarray(completion, np.float64)
+    return np.where(d < e, 1.0, 0.0)
 
 
-def linear_penalty(deadline: float, completion: float) -> float:
+def linear_penalty(deadline: ArrayLike, completion: ArrayLike) -> ArrayLike:
     """Ramp penalty: overshoot fraction of the deadline, capped at 1."""
-    if completion <= deadline:
-        return 0.0
-    if deadline <= 0:
-        return 1.0
-    return min(1.0, (completion - deadline) / deadline)
+    if not _is_array(deadline, completion):
+        if completion <= deadline:
+            return 0.0
+        if deadline <= 0:
+            return 1.0
+        return min(1.0, (completion - deadline) / deadline)
+    d = np.asarray(deadline, np.float64)
+    e = np.asarray(completion, np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        ramp = (e - d) / d
+    return np.where(e <= d, 0.0, np.where(d <= 0, 1.0, np.minimum(1.0, ramp)))
 
 
-def sigmoid_penalty(deadline: float, completion: float) -> float:
+def sigmoid_penalty(deadline: ArrayLike, completion: ArrayLike) -> ArrayLike:
     """Smooth sigmoid ramp in the overshoot ratio (paper §VI-A).
 
     Paper form: gamma = 1[d<e] * cap( 1 / (1 + (x/(1-x))^{-3}) ) with
@@ -57,37 +77,64 @@ def sigmoid_penalty(deadline: float, completion: float) -> float:
     x in (0, 1); for x >= 1 (completion at >= 2x the deadline) the
     penalty saturates at 1.
     """
-    if completion <= deadline:
+    if not _is_array(deadline, completion):
+        if completion <= deadline:
+            return 0.0
+        if deadline <= 0:
+            return 1.0
+        x = (completion - deadline) / deadline
+        if x >= 1.0:
+            return 1.0
+        if x <= 0.0:
+            return 0.0
+        ratio = x / (1.0 - x)
+        return min(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+    d = np.asarray(deadline, np.float64)
+    e = np.asarray(completion, np.float64)
+    with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
+        x = (e - d) / d
+        ratio = x / (1.0 - x)
+        inner = np.minimum(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+    return np.where(
+        e <= d,
+        0.0,
+        np.where(
+            d <= 0,
+            1.0,
+            np.where(x >= 1.0, 1.0, np.where(x <= 0.0, 0.0, inner)),
+        ),
+    )
+
+
+def no_penalty(deadline: ArrayLike, completion: ArrayLike) -> ArrayLike:
+    """Constant-zero penalty: Eq. 3 degenerates to pure accuracy
+    maximization (paper §III-A remark about high-accuracy applications)."""
+    if not _is_array(deadline, completion):
         return 0.0
-    if deadline <= 0:
-        return 1.0
-    x = (completion - deadline) / deadline
-    if x >= 1.0:
-        return 1.0
-    if x <= 0.0:
-        return 0.0
-    ratio = x / (1.0 - x)
-    return min(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+    d = np.asarray(deadline, np.float64)
+    e = np.asarray(completion, np.float64)
+    return np.zeros(np.broadcast_shapes(d.shape, e.shape))
 
 
 PENALTIES: dict[str, PenaltyFn] = {
     "step": step_penalty,
     "linear": linear_penalty,
     "sigmoid": sigmoid_penalty,
-    # A constant-zero penalty turns Eq. 3 into pure accuracy maximization
-    # (paper §III-A remark about high-accuracy applications).
-    "none": lambda d, e: 0.0,
+    "none": no_penalty,
 }
 
 
 def utility(
-    accuracy: float,
-    deadline: float,
-    start_time: float,
-    latency: float,
+    accuracy: ArrayLike,
+    deadline: ArrayLike,
+    start_time: ArrayLike,
+    latency: ArrayLike,
     penalty: PenaltyFn,
-) -> float:
+) -> ArrayLike:
     """Eq. 2: Accuracy(m) * [1 - gamma(d, t + l(m))].
+
+    Broadcasts like the penalties: all-scalar inputs return a float,
+    ndarray inputs return the broadcast utility array.
 
     Args:
       accuracy: estimated accuracy of the selected model for this request —
@@ -97,6 +144,14 @@ def utility(
       latency: expected execution latency l(m) (including any swap cost).
       penalty: gamma function.
     """
-    completion = start_time + latency
+    if not (
+        isinstance(accuracy, np.ndarray)
+        or isinstance(deadline, np.ndarray)
+        or isinstance(start_time, np.ndarray)
+        or isinstance(latency, np.ndarray)
+    ):
+        g = penalty(deadline, start_time + latency)
+        return float(accuracy) * (1.0 - min(1.0, max(0.0, g)))
+    completion = np.asarray(start_time, np.float64) + np.asarray(latency, np.float64)
     g = penalty(deadline, completion)
-    return float(accuracy) * (1.0 - min(1.0, max(0.0, g)))
+    return np.asarray(accuracy, np.float64) * (1.0 - np.clip(g, 0.0, 1.0))

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the batched Eq. 2 utility-scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gamma", "utility_scores_ref"]
+
+
+def gamma(penalty: str, d, e):
+    """Vectorized deadline penalty gamma(d, e) (paper §VI-A), jnp edition.
+
+    Mirrors repro.core.utility: step / linear / sigmoid / none, with the
+    same d <= 0 and saturation handling.  ``penalty`` is static.
+    """
+    if penalty == "none":
+        return jnp.zeros(jnp.broadcast_shapes(jnp.shape(d), jnp.shape(e)), e.dtype)
+    if penalty == "step":
+        return jnp.where(d < e, 1.0, 0.0)
+    safe_d = jnp.where(d > 0, d, 1.0)  # masked lanes; selected away below
+    x = (e - d) / safe_d
+    if penalty == "linear":
+        return jnp.where(e <= d, 0.0, jnp.where(d <= 0, 1.0, jnp.minimum(1.0, x)))
+    if penalty == "sigmoid":
+        ratio = x / jnp.where(x < 1.0, 1.0 - x, 1.0)
+        safe_ratio = jnp.where(ratio > 0, ratio, 1.0)
+        inner = jnp.minimum(1.0, 1.0 / (1.0 + safe_ratio ** (-3.0)))
+        return jnp.where(
+            e <= d,
+            0.0,
+            jnp.where(
+                d <= 0,
+                1.0,
+                jnp.where(x >= 1.0, 1.0, jnp.where(x <= 0.0, 0.0, inner)),
+            ),
+        )
+    raise ValueError(f"unknown penalty {penalty!r}")
+
+
+def utility_scores_ref(acc, deadlines, completions, penalty: str = "sigmoid"):
+    """(U (R, M), column means (M,)): Eq. 2 per pair + the Eq. 13 group
+    reduction.  ``deadlines`` (R,) broadcasts over models; ``completions``
+    is (R, M) or (M,)."""
+    a = jnp.asarray(acc)
+    d = jnp.asarray(deadlines)[:, None]
+    e = jnp.broadcast_to(jnp.asarray(completions), a.shape)
+    g = gamma(penalty, d, e)
+    u = a * (1.0 - jnp.clip(g, 0.0, 1.0))
+    return u, u.mean(axis=0)

@@ -1,0 +1,37 @@
+"""Fallback shims for the optional ``hypothesis`` dependency.
+
+The property-based tests use hypothesis (declared in requirements-dev.txt)
+but the tier-1 suite must still *collect* without it: these stand-ins make
+``@given(...)`` mark the test skipped instead of failing at import time,
+while every example-based test in the same module keeps running.
+"""
+import pytest
+
+
+def given(*args, **kwargs):
+    def decorate(fn):
+        return pytest.mark.skip(reason="hypothesis not installed (see requirements-dev.txt)")(fn)
+
+    return decorate
+
+
+def settings(*args, **kwargs):
+    def decorate(fn):
+        return fn
+
+    return decorate
+
+
+class _Strategies:
+    """Stands in for ``hypothesis.strategies``: every strategy builder
+    (floats, integers, lists, composite, ...) returns an inert callable so
+    module-level strategy construction succeeds."""
+
+    def __getattr__(self, name):
+        def build(*args, **kwargs):
+            return build  # composable: st.composite(f)() etc. stay inert
+
+        return build
+
+
+st = _Strategies()

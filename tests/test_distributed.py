@@ -114,7 +114,10 @@ def test_mini_dryrun_subprocess():
                         in_shardings=(p_sh, o_sh, {"tokens": tok_sh}),
                         out_shardings=(p_sh, o_sh, None),
                         ).lower(model.abstract_params(), abstract_opt, {"tokens": tok}).compile()
-            out["train_flops"] = float((c.cost_analysis() or {}).get("flops", 0))
+            ca = c.cost_analysis() or {}
+            if isinstance(ca, (list, tuple)):  # older jax: list of dicts
+                ca = ca[0] if ca else {}
+            out["train_flops"] = float(ca.get("flops", 0))
         # decode
         pol = make_policy(cfg, "decode", mesh)
         with mesh, use_sharding(mesh, pol):

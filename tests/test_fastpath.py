@@ -1,0 +1,204 @@
+"""Parity suite: the vectorized fast path must reproduce the scalar
+schedulers decision-for-decision (same selections, same orderings, same
+batch structure) with utilities matching to 1e-9, across all five
+policies, with and without SneakPeek posteriors attached."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    POLICY_NAMES,
+    WindowArrays,
+    evaluate,
+    grouped_schedule,
+    make_policy,
+)
+from repro.core.bruteforce import brute_force_groups
+from repro.core.evaluation import WorkerTimeline, estimate_accuracy
+from repro.core.fastpath import set_utility_backend, utility_matrix
+from repro.core.grouping import group_by_app
+from repro.core.priority import request_priorities, request_priority
+from repro.core.selection import group_locally_optimal, locally_optimal, max_accuracy
+from repro.core.sneakpeek import attach_sneakpeek
+from repro.core.utility import PENALTIES, utility
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+
+def _window(per_app=6, seed=0, theta="all"):
+    """One randomized window; ``theta`` = "all" | "some" | "none"."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs = make_requests(
+        list(APP_SPECS.values()), per_app=per_app, deadline_std_s=0.05, seed=seed
+    )
+    if theta != "none":
+        attach_sneakpeek(reqs, apps, sneaks)
+        if theta == "some":
+            for r in reqs[::3]:
+                r.theta = None
+                r.evidence = None
+    return reqs, apps
+
+
+def _sig(sched):
+    return [
+        (e.request.rid, e.model, e.order, e.batch_id, e.worker)
+        for e in sched.sorted_entries()
+    ]
+
+
+# ---------------------------------------------------------------- policies
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("seed,theta", [(0, "all"), (1, "some"), (2, "none")])
+def test_policy_parity(policy, seed, theta):
+    """Identical schedules and (to 1e-9) utilities, fast vs scalar."""
+    reqs, apps = _window(per_app=6, seed=seed, theta=theta)
+    fast = make_policy(policy).schedule(reqs, apps, 0.1)
+    slow = make_policy(policy, fastpath=False).schedule(reqs, apps, 0.1)
+    assert _sig(fast) == _sig(slow)
+    rf = evaluate(fast, apps, 0.1, acc_mode="oracle")
+    rs = evaluate(slow, apps, 0.1, acc_mode="oracle")
+    np.testing.assert_allclose(rf.utilities, rs.utilities, atol=1e-9, rtol=0)
+    np.testing.assert_allclose(rf.completions, rs.completions, atol=1e-9, rtol=0)
+
+
+def test_grouped_heuristic_path_parity():
+    """tau=0 forces the heuristic (non-brute-force) branch on both paths."""
+    for seed in range(4):
+        reqs, apps = _window(per_app=5, seed=seed, theta="some")
+        fast = grouped_schedule(reqs, apps, 0.1, tau=0, data_aware=True,
+                                split_by_label=True, use_fastpath=True)
+        slow = grouped_schedule(reqs, apps, 0.1, tau=0, data_aware=True,
+                                split_by_label=True, use_fastpath=False)
+        assert _sig(fast) == _sig(slow)
+
+
+def test_brute_force_arrays_memo_is_exact():
+    """The WindowArrays accuracy memo must not change the chosen plan."""
+    reqs, apps = _window(per_app=3, seed=7, theta="all")
+    groups = group_by_app(reqs)
+    wa = WindowArrays(reqs, apps, 0.1)
+    with_memo = brute_force_groups(groups, apps, 0.1, acc_mode="sharpened", arrays=wa)
+    without = brute_force_groups(groups, apps, 0.1, acc_mode="sharpened")
+    assert _sig(with_memo) == _sig(without)
+
+
+# ---------------------------------------------------------------- Eq. 9/12
+
+
+@pytest.mark.parametrize("mode", ["profiled", "sharpened", "oracle"])
+def test_acc_matrix_matches_estimate_accuracy(mode):
+    reqs, apps = _window(per_app=4, seed=3, theta="some")
+    wa = WindowArrays(reqs, apps, 0.1)
+    for r in reqs:
+        app = apps[r.app]
+        row = wa.acc_row(r, mode)
+        expected = [estimate_accuracy(r, app, m, mode) for m in app.models]
+        np.testing.assert_allclose(row, expected, atol=1e-12, rtol=0)
+
+
+@pytest.mark.parametrize("data_aware", [False, True])
+def test_priorities_match_scalar(data_aware):
+    reqs, apps = _window(per_app=5, seed=4, theta="some")
+    batched = request_priorities(reqs, apps, 0.1, data_aware=data_aware)
+    scalar = [request_priority(r, apps[r.app], 0.1, data_aware) for r in reqs]
+    np.testing.assert_allclose(batched, scalar, atol=1e-9, rtol=0)
+    # The arrays= wrapper is a thin lookup into the same vector.
+    wa = WindowArrays(reqs, apps, 0.1)
+    for r in reqs[:5]:
+        assert request_priority(r, apps[r.app], 0.1, data_aware, arrays=wa) == float(
+            batched[wa.index_of(r)]
+        )
+
+
+# ---------------------------------------------------------------- Eq. 13
+
+
+def test_selection_wrappers_match_scalar():
+    reqs, apps = _window(per_app=4, seed=5, theta="all")
+    wa = WindowArrays(reqs, apps, 0.1)
+    tl_a, tl_b = WorkerTimeline(0.1), WorkerTimeline(0.1)
+    for r in reqs:
+        app = apps[r.app]
+        for fn in (locally_optimal, max_accuracy):
+            m_fast = fn(r, app, tl_a, acc_mode="sharpened", arrays=wa)
+            m_slow = fn(r, app, tl_b, acc_mode="sharpened")
+            assert m_fast.name == m_slow.name, fn.__name__
+        # advance both timelines identically so residency states diverge
+        # from the initial empty state as the loop progresses
+        chosen = locally_optimal(r, app, tl_a, acc_mode="sharpened", arrays=wa)
+        tl_a.run_batch(chosen, 1)
+        tl_b.run_batch(chosen, 1)
+    for app_name, members in group_by_app(reqs).items():
+        app = apps[app_name]
+        m_fast = group_locally_optimal(members, app, tl_a, acc_mode="sharpened", arrays=wa)
+        m_slow = group_locally_optimal(members, app, tl_b, acc_mode="sharpened")
+        assert m_fast.name == m_slow.name
+
+
+# ---------------------------------------------------------------- Eq. 2
+
+
+def test_penalties_scalar_and_array_agree_elementwise():
+    """Satellite: ndarray penalties == scalar penalties on a grid covering
+    d <= 0, on-time, small overshoot, and both saturation regimes."""
+    deadlines = np.array([-0.5, 0.0, 1e-9, 0.05, 0.1, 0.1, 0.1, 0.1, 1.0, 2.0])
+    completions = np.array([0.1, 0.1, 0.5, 0.05, 0.0, 0.1, 0.14, 0.35, 1.05, 100.0])
+    for name, fn in PENALTIES.items():
+        arr = fn(deadlines, completions)
+        assert isinstance(arr, np.ndarray)
+        scalars = [fn(float(d), float(e)) for d, e in zip(deadlines, completions)]
+        np.testing.assert_allclose(arr, scalars, atol=1e-12, rtol=0, err_msg=name)
+        # broadcasting over a (d, e) mesh agrees with the flat evaluation
+        mesh = fn(deadlines[:, None], completions[None, :])
+        assert mesh.shape == (len(deadlines), len(completions))
+        for i, d in enumerate(deadlines):
+            for j, e in enumerate(completions):
+                np.testing.assert_allclose(
+                    mesh[i, j], fn(float(d), float(e)), atol=1e-12, rtol=0,
+                    err_msg=f"{name} d={d} e={e}",
+                )
+
+
+def test_utility_array_form_matches_scalar():
+    rng = np.random.default_rng(0)
+    acc = rng.uniform(0, 1, 16)
+    d = rng.uniform(-0.1, 0.4, 16)
+    start = rng.uniform(0, 0.2, 16)
+    lat = rng.uniform(0, 0.3, 16)
+    for fn in PENALTIES.values():
+        arr = utility(acc, d, start, lat, fn)
+        scalars = [
+            utility(float(a), float(dd), float(s), float(l), fn)
+            for a, dd, s, l in zip(acc, d, start, lat)
+        ]
+        np.testing.assert_allclose(arr, scalars, atol=1e-15, rtol=0)
+
+
+def test_utility_matrix_broadcasts():
+    acc = np.array([[0.9, 0.5], [0.8, 0.7]])
+    d = np.array([0.1, 0.2])
+    comp = np.array([0.05, 0.3])
+    u = utility_matrix(acc, d[:, None], comp[None, :], "step")
+    expected = acc * (1.0 - np.array([[0.0, 1.0], [0.0, 1.0]]))
+    np.testing.assert_allclose(u, expected)
+
+
+# ---------------------------------------------------------------- backends
+
+
+def test_pallas_utility_backend_matches_numpy_schedules():
+    """Same selections when Eq. 2 scoring runs through the Pallas kernel
+    (float32) instead of numpy float64 — including the elementwise
+    evaluate() scoring path (regression: 1-D tiles used to crash)."""
+    reqs, apps = _window(per_app=2, seed=9, theta="all")
+    numpy_sched = make_policy("SneakPeek", tau=0).schedule(reqs, apps, 0.1)
+    res_np = evaluate(numpy_sched, apps, 0.1, acc_mode="oracle")
+    set_utility_backend("pallas")
+    try:
+        pallas_sched = make_policy("SneakPeek", tau=0).schedule(reqs, apps, 0.1)
+        res_pl = evaluate(pallas_sched, apps, 0.1, acc_mode="oracle")
+    finally:
+        set_utility_backend("numpy")
+    assert _sig(pallas_sched) == _sig(numpy_sched)
+    np.testing.assert_allclose(res_pl.utilities, res_np.utilities, atol=1e-5)

@@ -9,6 +9,7 @@ from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.knn.ops import knn_class_votes, knn_topk
 from repro.kernels.ssd.ops import ssd
+from repro.kernels.utility.ops import utility_scores
 from repro.models.attention import flash_attention as model_flash
 
 
@@ -134,6 +135,43 @@ def test_knn_votes_match_bruteforce_numpy():
         nn = np.argsort(d2[i])[:5]
         expected = np.bincount(y[nn], minlength=3)
         np.testing.assert_array_equal(votes[i], expected)
+
+
+# ---------------------------------------------------------------- utility
+
+
+@pytest.mark.parametrize("penalty", ["step", "linear", "sigmoid", "none"])
+@pytest.mark.parametrize("r,m", [(7, 3), (64, 5), (300, 8)])
+def test_utility_kernel_sweep(penalty, r, m):
+    """Pallas Eq. 2 scoring vs jnp oracle vs the numpy fast-path math."""
+    from repro.core.utility import PENALTIES
+
+    # Deterministic seed (str hash() is salted per process).
+    rng = np.random.default_rng([r, m, len(penalty)])
+    acc = rng.uniform(0, 1, (r, m))
+    deadlines = rng.uniform(-0.05, 0.3, r)  # includes past/zero deadlines
+    completions = rng.uniform(0.0, 0.6, (r, m))
+    uk, mk = utility_scores(acc, deadlines, completions, penalty=penalty, use_kernel=True)
+    ur, mr = utility_scores(acc, deadlines, completions, penalty=penalty, use_kernel=False)
+    g = PENALTIES[penalty](deadlines[:, None], completions)
+    u_np = acc * (1.0 - np.clip(g, 0.0, 1.0))
+    np.testing.assert_allclose(np.asarray(uk), u_np, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(ur), u_np, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(mk), u_np.mean(axis=0), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(mr), u_np.mean(axis=0), atol=1e-5, rtol=1e-5)
+
+
+def test_utility_kernel_broadcast_completions():
+    """(M,) completions (one per variant, shared across the group) broadcast."""
+    rng = np.random.default_rng(4)
+    acc = rng.uniform(0, 1, (33, 4))
+    deadlines = rng.uniform(0.01, 0.3, 33)
+    comp = rng.uniform(0.0, 0.4, 4)
+    uk, mk = utility_scores(acc, deadlines, comp, penalty="sigmoid", use_kernel=True)
+    ur, _ = utility_scores(acc, deadlines, np.broadcast_to(comp, acc.shape),
+                           penalty="sigmoid", use_kernel=False)
+    np.testing.assert_allclose(np.asarray(uk), np.asarray(ur), atol=1e-6)
+    assert np.asarray(mk).shape == (4,)
 
 
 # ---------------------------------------------------------------- ssd
