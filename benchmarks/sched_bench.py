@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.sched_bench [--quick]
         [--sizes 64,256,1024,4096] [--policies SneakPeek,...]
-        [--out BENCH_sched.json]
+        [--workers 2,4] [--out BENCH_sched.json]
 
 For every (window size, policy) cell this times one full scheduling pass —
 the work the paper requires to finish inside the 100 ms window — under the
@@ -12,21 +12,28 @@ scheduled-requests/sec for both.  SneakPeek evidence (theta posteriors) is
 attached once outside the timed region: the benchmark isolates scheduling,
 not the SneakPeek inference stage.
 
+A second section benchmarks Eq. 15 multi-worker placement
+(``multiworker_schedule``, data-aware + label-split) over heterogeneous
+pools of ``--workers`` sizes, scalar loop vs the batched (worker x model)
+utility tiles of ``fastpath.fast_multiworker_schedule``.
+
 Writes ``BENCH_sched.json`` at the repo root (plus a copy under
-results/benchmarks/) and prints a table.  The SneakPeek x 1024-request
-cell is the acceptance gate: the fast path must exceed 5x.
+results/benchmarks/) and prints a table.  Acceptance gates: the
+SneakPeek x 1024-request cell must exceed 5x, and the 2-worker x
+1024-request multi-worker cell must exceed 3x.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import platform
+import sys
 import time
 from pathlib import Path
 
 import numpy as np
 
-from repro.core import POLICY_NAMES, evaluate, make_policy
+from repro.core import POLICY_NAMES, Worker, evaluate, make_policy, multiworker_schedule
 from repro.core.sneakpeek import attach_sneakpeek
 from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
 
@@ -45,18 +52,79 @@ def build_window(n_requests: int, seed: int = 0):
     return reqs, apps
 
 
-def time_schedule(policy, reqs, apps, now: float = 0.1,
-                  min_time_s: float = 0.2, max_reps: int = 50) -> float:
-    """Best-of wall time of one scheduling pass (at least one rep, more
-    until ``min_time_s`` total for timer stability)."""
+def time_call(fn, min_time_s: float = 0.2, max_reps: int = 50) -> float:
+    """Best-of wall time of ``fn()`` (at least one rep, more until
+    ``min_time_s`` total for timer stability)."""
     times, total = [], 0.0
     while total < min_time_s and len(times) < max_reps:
         t0 = time.perf_counter()
-        policy.schedule(reqs, apps, now)
+        fn()
         dt = time.perf_counter() - t0
         times.append(dt)
         total += dt
     return min(times)
+
+
+def time_schedule(policy, reqs, apps, now: float = 0.1,
+                  min_time_s: float = 0.2, max_reps: int = 50) -> float:
+    return time_call(
+        lambda: policy.schedule(reqs, apps, now), min_time_s, max_reps
+    )
+
+
+def heterogeneous_pool(n: int) -> list[Worker]:
+    """Alternating fast/slow workers with skewed host->device links."""
+    return [
+        Worker(i, speed=1.0 + 0.5 * (i % 2), load_scale=1.0 + 0.25 * (i % 3))
+        for i in range(n)
+    ]
+
+
+def run_multiworker(sizes, worker_counts, min_time_s=0.2):
+    """Eq. 15 placement throughput: scalar loop vs batched utility tiles."""
+    rows = []
+    for n in sizes:
+        reqs, apps = build_window(n)
+        actual_n = len(reqs)
+        for nw in worker_counts:
+            workers = heterogeneous_pool(nw)
+
+            def fast():
+                return multiworker_schedule(
+                    reqs, apps, workers, 0.1,
+                    data_aware=True, split_by_label=True, fastpath=True,
+                )
+
+            def slow():
+                return multiworker_schedule(
+                    reqs, apps, workers, 0.1,
+                    data_aware=True, split_by_label=True, fastpath=False,
+                )
+
+            t_fast = time_call(fast, min_time_s)
+            t_slow = time_call(slow, min_time_s)
+            u_fast = evaluate(fast(), apps, 0.1).mean_utility
+            u_slow = evaluate(slow(), apps, 0.1).mean_utility
+            row = {
+                "policy": "MultiWorker-SneakPeek",
+                "workers": nw,
+                "requests": actual_n,
+                "scalar_s": t_slow,
+                "fast_s": t_fast,
+                "scalar_rps": actual_n / t_slow,
+                "fast_rps": actual_n / t_fast,
+                "speedup": t_slow / t_fast,
+                "mean_utility_fast": u_fast,
+                "mean_utility_scalar": u_slow,
+            }
+            rows.append(row)
+            print(
+                f"[n={actual_n:5d}] multiworker x{nw} scalar"
+                f" {row['scalar_rps']:10.0f} rps | fast {row['fast_rps']:10.0f} rps"
+                f" | speedup {row['speedup']:6.2f}x",
+                flush=True,
+            )
+    return rows
 
 
 def run(sizes, policies, min_time_s=0.2):
@@ -97,6 +165,8 @@ def main():
     ap.add_argument("--quick", action="store_true", help="small sizes, fewer reps")
     ap.add_argument("--sizes", type=str, default="")
     ap.add_argument("--policies", type=str, default="")
+    ap.add_argument("--workers", type=str, default="",
+                    help="multi-worker pool sizes (default 2,4; 0 disables)")
     ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_sched.json"))
     args = ap.parse_args()
 
@@ -106,12 +176,26 @@ def main():
     )
     policies = [p for p in args.policies.split(",") if p] or list(POLICY_NAMES)
     min_time_s = 0.05 if args.quick else 0.2
+    worker_counts = [int(w) for w in args.workers.split(",") if w] or [2, 4]
+    worker_counts = [w for w in worker_counts if w > 0]
+    # The scalar Eq. 15 loop is O(W x M x B) per group: cap the sweep at
+    # 1024-request windows (the gate cell) to keep full runs bounded.
+    mw_sizes = [n for n in sizes if n <= 1024] or sizes[:1]
 
     rows = run(sizes, policies, min_time_s=min_time_s)
+    mw_rows = (
+        run_multiworker(mw_sizes, worker_counts, min_time_s=min_time_s)
+        if worker_counts
+        else []
+    )
 
     gate = [
         r for r in rows
         if r["policy"] == "SneakPeek" and abs(r["requests"] - 1024) <= len(APP_SPECS)
+    ]
+    mw_gate = [
+        r for r in mw_rows
+        if r["workers"] >= 2 and abs(r["requests"] - 1024) <= len(APP_SPECS)
     ]
     payload = {
         "benchmark": "sched_bench",
@@ -123,8 +207,11 @@ def main():
         },
         "sizes": sizes,
         "policies": policies,
+        "worker_counts": worker_counts,
         "results": rows,
+        "multiworker_results": mw_rows,
         "sneakpeek_1024_speedup": gate[0]["speedup"] if gate else None,
+        "multiworker_1024_speedup": mw_gate[0]["speedup"] if mw_gate else None,
     }
     out = Path(args.out)
     out.write_text(json.dumps(payload, indent=2, default=float))
@@ -135,10 +222,30 @@ def main():
         copy.parent.mkdir(parents=True, exist_ok=True)
         copy.write_text(out.read_text())
     print(f"\nwrote {out}")
+    failed = False
+    # Parity: scalar and fast paths must deliver the same mean utility
+    # (identical decisions; the tolerance absorbs float accumulation).
+    for r in rows + mw_rows:
+        uf, us = r["mean_utility_fast"], r["mean_utility_scalar"]
+        if not np.isclose(uf, us, rtol=1e-6, atol=1e-9):
+            print(f"UTILITY MISMATCH: {r['policy']} n={r['requests']}: "
+                  f"fast {uf!r} vs scalar {us!r}")
+            failed = True
     if gate:
         sp = gate[0]["speedup"]
         status = "PASS" if sp >= 5.0 else "FAIL"
+        failed |= sp < 5.0
         print(f"SneakPeek @1024 speedup: {sp:.2f}x (target >= 5x) [{status}]")
+    if mw_gate:
+        sp = mw_gate[0]["speedup"]
+        status = "PASS" if sp >= 3.0 else "FAIL"
+        failed |= sp < 3.0
+        print(
+            f"MultiWorker @1024 x{mw_gate[0]['workers']} speedup:"
+            f" {sp:.2f}x (target >= 3x) [{status}]"
+        )
+    if failed:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

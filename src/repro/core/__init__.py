@@ -18,14 +18,23 @@ from repro.core.evaluation import EvalResult, WorkerTimeline, evaluate
 from repro.core.fastpath import (
     WindowArrays,
     fast_grouped_schedule,
+    fast_multiworker_schedule,
     fast_per_request_schedule,
+    precompute_windows,
     set_utility_backend,
 )
 from repro.core.grouping import grouped_schedule, group_by_app, split_groups_by_label
 from repro.core.multiworker import Worker, multiworker_schedule
 from repro.core.priority import group_priority, request_priorities, request_priority
-from repro.core.scheduler import POLICY_NAMES, SchedulerPolicy, make_policy, schedule_window
+from repro.core.scheduler import (
+    POLICY_NAMES,
+    SchedulerPolicy,
+    effective_apps,
+    make_policy,
+    schedule_window,
+)
 from repro.core.simulator import Simulation, WindowResult, run_window
+from repro.core.streaming import StreamingState
 from repro.core.sneakpeek import (
     ConfusionSneakPeek,
     DecisionRuleSneakPeek,
@@ -42,13 +51,14 @@ __all__ = [
     "DirichletPrior", "jeffreys_prior", "posterior", "posterior_mean",
     "strongly_informative_prior", "weakly_informative_prior",
     "EvalResult", "WorkerTimeline", "evaluate",
-    "WindowArrays", "fast_grouped_schedule", "fast_per_request_schedule",
-    "set_utility_backend",
+    "WindowArrays", "fast_grouped_schedule", "fast_multiworker_schedule",
+    "fast_per_request_schedule", "precompute_windows", "set_utility_backend",
     "grouped_schedule", "group_by_app", "split_groups_by_label",
     "Worker", "multiworker_schedule",
     "group_priority", "request_priorities", "request_priority",
-    "POLICY_NAMES", "SchedulerPolicy", "make_policy", "schedule_window",
-    "Simulation", "WindowResult", "run_window",
+    "POLICY_NAMES", "SchedulerPolicy", "effective_apps", "make_policy",
+    "schedule_window",
+    "Simulation", "WindowResult", "run_window", "StreamingState",
     "ConfusionSneakPeek", "DecisionRuleSneakPeek", "KNNSneakPeek",
     "SneakPeekModel", "attach_sneakpeek",
     "Application", "Request", "Schedule", "ScheduleEntry",

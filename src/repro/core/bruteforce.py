@@ -29,6 +29,7 @@ def _score_plan(
     now: float,
     acc_mode: str,
     arrays=None,
+    timeline: WorkerTimeline | None = None,
 ) -> float:
     """Mean estimated utility of an ordered (request, model, batch_id) plan.
 
@@ -37,8 +38,11 @@ def _score_plan(
     solver enumerates |A|! * prod|M_a| candidate plans but only R * M
     distinct (request, model) accuracies exist.  Timing and accumulation
     stay scalar so candidate ranking is unchanged down to the last bit.
+
+    ``timeline`` seeds each candidate replay with carried streaming state
+    (backlog + residency); every plan scores from a fresh clone.
     """
-    tl = WorkerTimeline(now)
+    tl = timeline.clone() if timeline is not None else WorkerTimeline(now)
     total = 0.0
     i = 0
     n = len(plan)
@@ -82,6 +86,7 @@ def brute_force_requests(
     acc_mode: str = "profiled",
     max_candidates: int = 2_000_000,
     arrays=None,
+    timeline: WorkerTimeline | None = None,
 ) -> Schedule:
     """Exact solution of Eq. 3 at request granularity.
 
@@ -105,7 +110,7 @@ def brute_force_requests(
         ordered = [requests[i] for i in perm]
         for choice in itertools.product(*[ [m.name for m in apps[r.app].models] for r in ordered ]):
             plan = [(r, m, -1) for r, m in zip(ordered, choice)]
-            u = _score_plan(plan, apps, now, acc_mode, arrays=arrays)
+            u = _score_plan(plan, apps, now, acc_mode, arrays=arrays, timeline=timeline)
             if u > best_u:
                 best_u, best_plan = u, plan
     sched = _plan_to_schedule(best_plan)
@@ -120,6 +125,7 @@ def brute_force_groups(
     acc_mode: str = "profiled",
     max_candidates: int = 500_000,
     arrays=None,
+    timeline: WorkerTimeline | None = None,
 ) -> Schedule:
     """Exact group-level solution (Alg. 1 fast path).
 
@@ -148,7 +154,7 @@ def brute_force_groups(
             for b, (k, m) in enumerate(zip(perm, choice)):
                 members = sorted(groups[k], key=lambda r: (r.deadline_s, r.rid))
                 plan.extend((r, m, b) for r in members)
-            u = _score_plan(plan, apps, now, acc_mode, arrays=arrays)
+            u = _score_plan(plan, apps, now, acc_mode, arrays=arrays, timeline=timeline)
             if u > best_u:
                 best_u, best_plan = u, plan
     sched = _plan_to_schedule(best_plan)

@@ -29,6 +29,7 @@ from typing import Iterable, Mapping, Sequence
 import numpy as np
 
 from repro.core.accuracy import ModelProfile, expected_accuracy
+from repro.core.residency import evict_lru
 from repro.core.types import Application, Request, Schedule, ScheduleEntry
 
 __all__ = ["WorkerTimeline", "estimate_accuracy", "evaluate", "EvalResult"]
@@ -71,15 +72,28 @@ class WorkerTimeline:
             # (eviction then never fires — effectively unlimited memory).
             self._profiles.setdefault(name, profile.memory_bytes)
             self._resident.append(name)
-            while len(self._resident) > 1 and self._bytes() > self.capacity:
-                self._resident.pop(0)
+            evict_lru(self._resident, self._profiles, self.capacity, protect=name)
         return swap
-
-    def _bytes(self) -> int:
-        return sum(self._profiles.get(n, 0) for n in self._resident)
 
     def register_sizes(self, sizes: Mapping[str, int]) -> None:
         self._profiles = dict(sizes)
+
+    def clone(self) -> "WorkerTimeline":
+        """Independent copy: speculative scheduling peeks a clone so the
+        committed (streaming) timeline is never mutated."""
+        out = WorkerTimeline(self.t, self.capacity, self._resident)
+        out._profiles = dict(self._profiles)
+        return out
+
+    def advance(self, now: float) -> None:
+        """An idle worker becomes ready at ``now``; a backlogged worker
+        keeps its later busy-until time.  Residency is untouched."""
+        self.t = max(self.t, float(now))
+
+    @property
+    def mru(self) -> str | None:
+        """Most-recently-used resident model (None when empty)."""
+        return self._resident[-1] if self._resident else None
 
     def swap_vector(self, names: Sequence[str], swaps: np.ndarray) -> np.ndarray:
         """(M,) swap latencies peek_batch would charge each model if it ran
@@ -128,10 +142,23 @@ class EvalResult:
     accuracies: np.ndarray
     violations: int
     violation_time_s: float
+    # Per-worker busy seconds accrued by this replay (swap + execution).
+    # Pre-created idle workers (``num_workers``) appear with 0.0, so pool
+    # utilization reflects workers that never received work.
+    worker_busy_s: dict = dataclasses.field(default_factory=dict)
+    span_s: float = 0.0  # makespan of the replay: max completion - now
 
     @property
     def violation_rate(self) -> float:
         return self.violations / max(1, len(self.utilities))
+
+    @property
+    def utilization(self) -> float:
+        """Mean fraction of the makespan each worker spent busy."""
+        if not self.worker_busy_s or self.span_s <= 0:
+            return 0.0
+        busy = sum(self.worker_busy_s.values())
+        return busy / (len(self.worker_busy_s) * self.span_s)
 
 
 def evaluate(
@@ -141,16 +168,46 @@ def evaluate(
     acc_mode: str = "oracle",
     memory_capacity_bytes: int | None = None,
     num_workers: int | None = None,
+    state=None,
 ) -> EvalResult:
     """Replay a schedule through worker timelines and score it (Eq. 3).
 
     Entries are executed per worker in ``order``; consecutive entries with
     the same (worker, batch_id >= 0, model) form one batched inference.
+
+    ``num_workers`` pre-creates that many timelines (ids 0..n-1) so idle
+    workers show up in ``EvalResult.worker_busy_s`` / ``utilization``.
+
+    ``state`` (a ``repro.core.streaming.StreamingState``) replays onto the
+    persistent per-worker timelines instead of fresh ones: batches start
+    after each worker's carried backlog, resident models are not
+    re-charged their swap, and the realized executions are COMMITTED to
+    the state (residency + busy-until carry to the next window).  The
+    state OWNS the pool: its existing timelines all count toward
+    utilization, ``num_workers`` is ignored, and residency capacity must
+    be configured on the StreamingState, not here.
     """
     entries = schedule.sorted_entries()
+    if state is not None:
+        if memory_capacity_bytes is not None:
+            raise ValueError(
+                "memory_capacity_bytes is owned by the streaming state; "
+                "set it on StreamingState instead"
+            )
+        state.advance(now)
+        workers = state.timelines
+    else:
+        workers = {}
+        if num_workers:
+            workers = {
+                w: WorkerTimeline(now, memory_capacity_bytes) for w in range(num_workers)
+            }
+    busy = {w: 0.0 for w in workers}
     if not entries:
-        return EvalResult(0.0, np.zeros(0), np.zeros(0), np.zeros(0), np.zeros(0), 0, 0.0)
-    workers: dict[int, WorkerTimeline] = {}
+        return EvalResult(
+            0.0, np.zeros(0), np.zeros(0), np.zeros(0), np.zeros(0), 0, 0.0,
+            worker_busy_s=busy,
+        )
 
     # Group consecutive same-batch entries per worker.
     batches: list[list[ScheduleEntry]] = []
@@ -170,9 +227,14 @@ def evaluate(
     for batch in batches:
         w = batch[0].worker
         if w not in workers:
-            workers[w] = WorkerTimeline(now, memory_capacity_bytes)
+            workers[w] = (
+                state.timeline(w) if state is not None
+                else WorkerTimeline(now, memory_capacity_bytes)
+            )
+            busy.setdefault(w, 0.0)
         profile = apps[batch[0].request.app].model(batch[0].model)
         start, completion = workers[w].run_batch(profile, len(batch))
+        busy[w] += completion - start
         for e in batch:
             e.est_start_s = start
             e.est_latency_s = completion - start
@@ -192,4 +254,6 @@ def evaluate(
         accuracies=accs,
         violations=int(missed.sum()),
         violation_time_s=float(over[missed].sum()),
+        worker_busy_s=busy,
+        span_s=max(0.0, float(completions.max()) - float(now)),
     )

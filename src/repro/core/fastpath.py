@@ -46,6 +46,8 @@ __all__ = [
     "utility_matrix",
     "fast_per_request_schedule",
     "fast_grouped_schedule",
+    "fast_multiworker_schedule",
+    "precompute_windows",
 ]
 
 _UTILITY_BACKEND = "numpy"
@@ -134,6 +136,11 @@ class AppArrays:
     # utility ties, argmax over U[:, tie_pref] picks exactly the model the
     # scalar key (u, -latency_s, name) would.
     tie_pref: np.ndarray
+    # The profile objects the arrays were built from, pinned for the memo
+    # staleness check: identity comparison against app.models catches
+    # in-place replacement of a variant, and holding the references keeps
+    # it sound (no id reuse; ModelProfile itself is frozen).
+    models_pin: tuple = ()
 
     @classmethod
     def build(cls, app: Application) -> "AppArrays":
@@ -163,6 +170,7 @@ class AppArrays:
             names=names,
             name_to_idx={n: i for i, n in enumerate(names)},
             tie_pref=np.asarray(pref, dtype=np.int64),
+            models_pin=tuple(models),
         )
 
     @classmethod
@@ -171,10 +179,14 @@ class AppArrays:
         they are cached on the instance and shared by every window (and
         every evaluate() call).  ``dataclasses.replace`` — how apps gain
         short-circuit variants — produces a fresh object, missing the
-        cache naturally; the variant-count guard catches in-place
-        ``models`` mutation."""
+        cache naturally; the profile-identity guard catches in-place
+        ``models`` mutation (replaced, added or removed variants)."""
         cached = getattr(app, "_fastpath_arrays", None)
-        if cached is None or cached.app is not app or len(cached.names) != len(app.models):
+        if (
+            cached is None
+            or len(cached.models_pin) != len(app.models)
+            or any(a is not b for a, b in zip(cached.models_pin, app.models))
+        ):
             cached = cls.build(app)
             app._fastpath_arrays = cached
         return cached
@@ -355,6 +367,7 @@ def fast_per_request_schedule(
     selection: str = "locally_optimal",
     data_aware: bool = False,
     arrays: WindowArrays | None = None,
+    state=None,
 ) -> Schedule:
     """Vectorized equivalent of ``SchedulerPolicy._per_request_schedule``.
 
@@ -365,12 +378,21 @@ def fast_per_request_schedule(
     at M ~ a handful of variants, per-step ndarray dispatch costs more than
     it saves, while the batched matmul has already paid for the accuracy
     estimates (the scalar path's dominant cost).
+
+    ``state`` (streaming.StreamingState) seeds the queue tail and model
+    residency from worker 0's carried timeline (a clone — scheduling never
+    commits to the state); the stateless hot path keeps its inline
+    single-slot residency tracking.
     """
     if not requests:
         return Schedule()
     acc_mode = "sharpened" if data_aware else "profiled"
     wa = arrays if arrays is not None else WindowArrays(requests, apps, now)
     order = wa.order_indices(ordering, data_aware)
+    tl = None
+    if state is not None:
+        tl = state.timeline(0).clone()
+        tl.advance(now)
 
     max_acc_choice: dict[str, np.ndarray] = {}
     acc_rows: dict[str, list[list[float]]] = {}
@@ -399,17 +421,18 @@ def fast_per_request_schedule(
             aa.lat1.tolist(),
             aa.latency_s.tolist(),
             aa.app.penalty_fn,
+            aa.app.models,
         )
 
     entries: list[ScheduleEntry] = []
-    t = float(now)
+    t = float(now) if tl is None else tl.t
     resident: str | None = None  # single-slot residency (capacity=None)
     row_of = wa.row_of
     for k, g in enumerate(order):
         g = int(g)
         r = wa.requests[g]
         app_name = wa.app_of[g]
-        names, swaps, lat1s, lat_ss, penalty_fn = tables[app_name]
+        names, swaps, lat1s, lat_ss, penalty_fn, models = tables[app_name]
         if selection == "max_accuracy":
             sel = int(max_acc_choice[app_name][row_of[g]])
         else:
@@ -419,15 +442,24 @@ def fast_per_request_schedule(
             deadline = r.deadline_s
             sel, best_key = 0, None
             for m_i in range(len(names)):
-                completion = t + (0.0 if resident == names[m_i] else swaps[m_i]) + lat1s[m_i]
+                if tl is None:
+                    swap_m = 0.0 if resident == names[m_i] else swaps[m_i]
+                else:
+                    swap_m = 0.0 if tl._is_resident(names[m_i]) else swaps[m_i]
+                completion = t + swap_m + lat1s[m_i]
                 gam = penalty_fn(deadline, completion)
                 u = row[m_i] * (1.0 - min(1.0, max(0.0, gam)))
                 key = (u, -lat_ss[m_i], names[m_i])
                 if best_key is None or key > best_key:
                     sel, best_key = m_i, key
-        start = t
-        t = start + (0.0 if resident == names[sel] else swaps[sel]) + lat1s[sel]
-        resident = names[sel]
+        if tl is None:
+            start = t
+            t = start + (0.0 if resident == names[sel] else swaps[sel]) + lat1s[sel]
+            resident = names[sel]
+        else:
+            # Streaming: commit to the cloned timeline so residency follows
+            # the carried state's exact (possibly capacity-based) semantics.
+            start, t = tl.run_batch(models[sel], 1)
         entries.append(
             ScheduleEntry(
                 request=r,
@@ -456,6 +488,8 @@ def fast_grouped_schedule(
     data_aware: bool = False,
     split_by_label: bool = False,
     acc_mode: str | None = None,
+    arrays: WindowArrays | None = None,
+    state=None,
 ) -> Schedule:
     """Vectorized Algorithm 1, mirroring ``grouping.grouped_schedule``.
 
@@ -465,6 +499,9 @@ def fast_grouped_schedule(
     branch delegates to the exact scalar solver, feeding it the window's
     memoized accuracies so it stays bit-identical while dropping its
     O(candidates x requests) accuracy recomputation.
+
+    ``state`` seeds the worker timeline (backlog + residency) from the
+    carried streaming state — a clone, so scheduling never commits.
     """
     from repro.core.bruteforce import brute_force_groups
     from repro.core.evaluation import WorkerTimeline
@@ -480,11 +517,18 @@ def fast_grouped_schedule(
     if split_by_label:
         groups = split_groups_by_label(groups, apps)
 
-    wa = WindowArrays(requests, apps, now)
+    wa = arrays if arrays is not None else WindowArrays(requests, apps, now)
+    if state is not None:
+        tl = state.timeline(0).clone()
+        tl.advance(now)
+    else:
+        tl = WorkerTimeline(now)
 
     if len(groups) <= tau:
         try:
-            return brute_force_groups(groups, apps, now, acc_mode=acc_mode, arrays=wa)
+            return brute_force_groups(
+                groups, apps, now, acc_mode=acc_mode, arrays=wa, timeline=tl
+            )
         except ValueError:
             pass  # too many (group-ordering x model) candidates; fall through
 
@@ -504,7 +548,6 @@ def fast_grouped_schedule(
         )
 
     entries: list[ScheduleEntry] = []
-    tl = WorkerTimeline(now)
     order = 1
     for batch_id, (key, members) in enumerate(ordered_groups):
         app = apps[members[0].app]
@@ -527,6 +570,270 @@ def fast_grouped_schedule(
     sched = Schedule(entries=entries)
     sched.validate()
     return sched
+
+
+# --------------------------------------------------------------------------
+# Fast multi-worker scheduling (paper §VII, Eq. 15)
+# --------------------------------------------------------------------------
+
+
+def fast_multiworker_schedule(
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    workers: Sequence,
+    now: float,
+    data_aware: bool = False,
+    split_by_label: bool = False,
+    per_request: bool = False,
+    arrays: WindowArrays | None = None,
+    state=None,
+) -> Schedule:
+    """Vectorized Eq. 15, mirroring ``multiworker.multiworker_schedule``.
+
+    Each placement step scores ALL (worker, model) candidates for the
+    group at once: one (W, B, M) utility tile — accuracies from the
+    window's Eq. 9 matmul, completions from the per-worker latency-scaled
+    model axis — reduced to (W, M) mean member utility and selected with
+    the shared tie-break key (utility, -scaled latency, name, -wid).
+    O(groups) batched tiles replace the scalar loop's
+    O(groups x workers x models x members) Python calls.
+
+    ``workers`` are ``multiworker.Worker``s (duck-typed: wid / speed /
+    load_scale / scaled()).  ``state`` seeds each worker's timeline from
+    the carried streaming state via clones.
+    """
+    from repro.core.evaluation import WorkerTimeline
+    from repro.core.grouping import group_by_app, split_groups_by_label
+
+    if not requests:
+        return Schedule()
+    if not workers:
+        raise ValueError("multiworker_schedule requires at least one worker")
+    acc_mode = "sharpened" if data_aware else "profiled"
+    if per_request:
+        groups = {f"r{r.rid}": [r] for r in requests}
+    else:
+        groups = group_by_app(requests)
+        if split_by_label:
+            groups = split_groups_by_label(groups, apps)
+
+    wa = arrays if arrays is not None else WindowArrays(requests, apps, now)
+    prio = wa.priorities(data_aware)
+    member_idx = {key: wa.rows_of(members) for key, members in groups.items()}
+    gp = {key: float(np.mean(prio[member_idx[key]])) for key in groups}  # Eq. 14
+    ordered_groups = sorted(groups.items(), key=lambda item: (-gp[item[0]], item[0]))
+
+    timelines: dict[int, WorkerTimeline] = {}
+    for w in workers:
+        if state is not None:
+            tl = state.timeline(w.wid).clone()
+            tl.advance(now)
+        else:
+            tl = WorkerTimeline(now)
+        timelines[w.wid] = tl
+    W = len(workers)
+    speeds = np.array([w.speed for w in workers])
+    load_scales = np.array([w.load_scale for w in workers])
+    orders = {w.wid: 1 for w in workers}
+    entries: list[ScheduleEntry] = []
+
+    # Per-app (W, M) scaled latency/swap tables + name ranks, built once.
+    scaled_tables: dict[str, tuple] = {}
+
+    def app_table(app_name: str):
+        tab = scaled_tables.get(app_name)
+        if tab is None:
+            aa = wa.app_arrays[app_name]
+            m = len(aa.names)
+            rank = np.empty(m, dtype=np.int64)
+            for pos, i in enumerate(sorted(range(m), key=lambda i: aa.names[i])):
+                rank[i] = pos
+            tab = (
+                aa,
+                aa.lat_fixed[None, :] / speeds[:, None],  # (W, M)
+                aa.lat_item[None, :] / speeds[:, None],
+                aa.swap[None, :] * load_scales[:, None],
+                aa.latency_s[None, :] / speeds[:, None],  # tie-break key
+                np.tile(rank, W),
+                np.repeat(-np.array([w.wid for w in workers]), m),
+            )
+            scaled_tables[app_name] = tab
+        return tab
+
+    for batch_id, (key, members) in enumerate(ordered_groups):
+        app_name = members[0].app
+        aa, slat_fixed, slat_item, sswap, slat_key, rank_flat, negwid_flat = app_table(
+            app_name
+        )
+        idx = member_idx[key]
+        b = len(members)
+        # (W, M) completion times if this batch ran next on each candidate.
+        t_vec = np.array([timelines[w.wid].t for w in workers])
+        swap_eff = np.stack(
+            [
+                timelines[w.wid].swap_vector(aa.names, sswap[i])
+                for i, w in enumerate(workers)
+            ]
+        )
+        completions = t_vec[:, None] + swap_eff + slat_fixed + slat_item * b
+        A_g = wa.acc_matrix(app_name, acc_mode)[wa.row_of[idx]]  # (B, M)
+        tile = utility_matrix(
+            A_g[None, :, :],
+            wa.deadlines[idx][None, :, None],
+            completions[:, None, :],
+            aa.app.penalty,
+        )  # (W, B, M)
+        u_mean = tile.mean(axis=1)  # (W, M)
+        # argmax with the shared tie-break: utility, lower scaled latency,
+        # larger name, lower worker id.  lexsort keys run minor -> major.
+        pick = int(
+            np.lexsort(
+                (negwid_flat, rank_flat, -slat_key.ravel(), u_mean.ravel())
+            )[-1]
+        )
+        wi, mi = divmod(pick, len(aa.names))
+        w = workers[wi]
+        sm = w.scaled(aa.app.models[mi])
+        tl = timelines[w.wid]
+        start, completion = tl.run_batch(sm, b)
+        member_order = np.lexsort((wa.rids[idx], -prio[idx]))
+        for j in member_order:
+            entries.append(
+                ScheduleEntry(
+                    request=wa.requests[int(idx[int(j)])],
+                    model=sm.name,
+                    order=orders[w.wid],
+                    worker=w.wid,
+                    batch_id=batch_id,
+                    est_start_s=start,
+                    est_latency_s=completion - start,
+                )
+            )
+            orders[w.wid] += 1
+    sched = Schedule(entries=entries)
+    sched.validate()
+    return sched
+
+
+# --------------------------------------------------------------------------
+# Multi-window batched precompute (streaming fast path)
+# --------------------------------------------------------------------------
+
+_JAX_STACKED = None  # lazily-built jitted program (shape-polymorphic via jit cache)
+
+
+def _stacked_program_numpy(theta, R, profiled, sc, has_theta, d_rel):
+    S = theta @ R.T
+    A = np.where(has_theta[:, None], S, profiled[None, :])
+    if sc.any():
+        A[:, sc] = profiled[sc]
+    var = A.var(axis=1) if A.shape[1] > 1 else np.zeros(A.shape[0])
+    prio = (1.0 + var) * np.exp(-np.maximum(d_rel, -60.0))
+    return A, prio
+
+
+def _stacked_program_jax():
+    global _JAX_STACKED
+    if _JAX_STACKED is None:
+        import jax
+        import jax.numpy as jnp
+
+        def fn(theta, R, profiled, sc, has_theta, d_rel):
+            S = theta @ R.T
+            A = jnp.where(has_theta[:, None], S, profiled[None, :])
+            A = jnp.where(sc[None, :], profiled[None, :], A)
+            # shapes are static under jit: the branch resolves at trace time
+            var = A.var(axis=1) if A.shape[1] > 1 else jnp.zeros(A.shape[0])
+            prio = (1.0 + var) * jnp.exp(-jnp.maximum(d_rel, -60.0))
+            return A, prio
+
+        _JAX_STACKED = jax.jit(fn)
+    return _JAX_STACKED
+
+
+def precompute_windows(
+    windows: Sequence[tuple[Sequence[Request], float]],
+    apps: Mapping[str, Application],
+    data_aware: bool = False,
+    backend: str = "numpy",
+) -> list[WindowArrays]:
+    """Stack several windows' request matrices into ONE batched program.
+
+    Instead of evaluating Eq. 9 (sharpened accuracies) and Eq. 12
+    (priorities) lazily window by window, all windows' per-app theta rows
+    and deadlines are concatenated and run through a single program per
+    application; the results are scattered back into each window's
+    ``WindowArrays`` caches, so the subsequent sequential scheduling pass
+    finds everything precomputed.
+
+    ``windows`` is a sequence of (requests, now) pairs.  ``backend``:
+
+      * "numpy" (default) — row-identical to the lazy per-window compute.
+      * "jax"   — one jitted device-resident program per (shape, app);
+        float32 on default JAX configs, so decisions can differ on
+        near-ties (~1e-7 utility).  Falls back to numpy when JAX is
+        unavailable.
+
+    Returns the per-window ``WindowArrays`` (pass via ``arrays=`` to the
+    fast schedulers / ``schedule_window``).
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown precompute backend {backend!r}")
+    mode = "sharpened" if data_aware else "profiled"
+    was = [WindowArrays(list(reqs), apps, now) for reqs, now in windows]
+
+    run = _stacked_program_numpy
+    if backend == "jax":
+        try:
+            run = _stacked_program_jax()
+        except ImportError:
+            run = _stacked_program_numpy
+
+    # Stack per app across windows.
+    app_names: list[str] = []
+    for w in was:
+        for name in w.req_idx:
+            if name not in app_names:
+                app_names.append(name)
+    prios = [np.zeros(len(w.requests)) for w in was]
+    pos = {id(w): i for i, w in enumerate(was)}
+    for app_name in app_names:
+        members = [w for w in was if app_name in w.req_idx]
+        aa = members[0].app_arrays[app_name]
+        n_classes = aa.R.shape[1]
+        theta_blocks, has_blocks, d_blocks, sizes = [], [], [], []
+        for w in members:
+            idx = w.req_idx[app_name]
+            n = len(idx)
+            theta = np.zeros((n, n_classes))
+            has = np.zeros(n, dtype=bool)
+            rows = w._theta_rows[app_name]
+            if rows.size and mode == "sharpened":
+                theta[rows] = w._theta_mat[app_name]
+                has[rows] = True
+            theta_blocks.append(theta)
+            has_blocks.append(has)
+            d_blocks.append(w.deadlines[idx] - w.now)
+            sizes.append(n)
+        A_all, prio_all = run(
+            np.concatenate(theta_blocks),
+            aa.R,
+            aa.profiled,
+            aa.sc,
+            np.concatenate(has_blocks),
+            np.concatenate(d_blocks),
+        )
+        A_all = np.asarray(A_all, np.float64)
+        prio_all = np.asarray(prio_all, np.float64)
+        # Scatter back into each window's lazy caches.
+        off = 0
+        for w, n in zip(members, sizes):
+            w._acc_cache[(app_name, mode)] = A_all[off : off + n]
+            prios[pos[id(w)]][w.req_idx[app_name]] = prio_all[off : off + n]
+            off += n
+    for w, p in zip(was, prios):
+        w._prio_cache[data_aware] = p
+    return was
 
 
 # --------------------------------------------------------------------------

@@ -78,6 +78,8 @@ def grouped_schedule(
     split_by_label: bool = False,
     acc_mode: str | None = None,
     use_fastpath: bool = True,
+    arrays=None,
+    state=None,
 ) -> Schedule:
     """Algorithm 1 (+ optional §V-C2 splitting when ``split_by_label``).
 
@@ -88,6 +90,11 @@ def grouped_schedule(
     in repro.core.fastpath, which consumes one ``WindowArrays`` precompute
     instead of O(R * M) scalar accuracy/penalty calls; pass False for the
     scalar reference path (same schedules — see tests/test_fastpath.py).
+
+    ``state`` (streaming.StreamingState) seeds the worker timeline with
+    carried backlog and model residency (scheduling peeks a clone; only
+    ``evaluate(..., state=...)`` commits).  ``arrays`` optionally supplies
+    a precomputed ``fastpath.WindowArrays`` (fast path only).
     """
     if use_fastpath:
         from repro.core.fastpath import fast_grouped_schedule
@@ -100,6 +107,8 @@ def grouped_schedule(
             data_aware=data_aware,
             split_by_label=split_by_label,
             acc_mode=acc_mode,
+            arrays=arrays,
+            state=state,
         )
     if not requests:
         return Schedule()
@@ -110,9 +119,15 @@ def grouped_schedule(
     if split_by_label:
         groups = split_groups_by_label(groups, apps)
 
+    if state is not None:
+        tl = state.timeline(0).clone()
+        tl.advance(now)
+    else:
+        tl = WorkerTimeline(now)
+
     if len(groups) <= tau:
         try:
-            return brute_force_groups(groups, apps, now, acc_mode=acc_mode)
+            return brute_force_groups(groups, apps, now, acc_mode=acc_mode, timeline=tl)
         except ValueError:
             pass  # too many (group-ordering x model) candidates; fall through
 
@@ -138,7 +153,6 @@ def grouped_schedule(
             key=lambda item: (app_rank[item[1][0].app], -gp[item[0]])
         )
 
-    tl = WorkerTimeline(now)
     entries: list[ScheduleEntry] = []
     order = 1
     for batch_id, (key, members) in enumerate(ordered_groups):

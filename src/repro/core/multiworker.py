@@ -56,13 +56,41 @@ def multiworker_schedule(
     data_aware: bool = False,
     split_by_label: bool = False,
     per_request: bool = False,
+    fastpath: bool = True,
+    state=None,
+    arrays=None,
 ) -> Schedule:
     """Greedy grouped scheduling over heterogeneous workers (Eq. 15).
 
     ``per_request=True`` degrades grouping to singletons — the
-    locally-optimal multi-worker baseline of Fig. 15."""
+    locally-optimal multi-worker baseline of Fig. 15.
+
+    ``fastpath`` (default) delegates to the vectorized implementation in
+    ``repro.core.fastpath``, which scores every (worker, model) candidate
+    of a placement step as one batched utility tile; pass False for this
+    scalar reference loop (identical decisions — see tests/test_fastpath.py).
+    ``state`` (streaming.StreamingState) seeds per-worker backlog and model
+    residency from the carried cross-window state; ``arrays`` is an
+    optional precomputed ``fastpath.WindowArrays`` (fast path only).
+    """
     if not requests:
         return Schedule()
+    if not workers:
+        raise ValueError("multiworker_schedule requires at least one worker")
+    if fastpath:
+        from repro.core.fastpath import fast_multiworker_schedule
+
+        return fast_multiworker_schedule(
+            requests,
+            apps,
+            workers,
+            now,
+            data_aware=data_aware,
+            split_by_label=split_by_label,
+            per_request=per_request,
+            arrays=arrays,
+            state=state,
+        )
     acc_mode = "sharpened" if data_aware else "profiled"
     if per_request:
         groups = {f"r{r.rid}": [r] for r in requests}
@@ -76,13 +104,26 @@ def multiworker_schedule(
         return (-group_priority(members, apps[members[0].app], now, data_aware), key)
 
     ordered_groups = sorted(groups.items(), key=gp)
-    timelines = {w.wid: WorkerTimeline(now) for w in workers}
+    timelines: dict[int, WorkerTimeline] = {}
+    for w in workers:
+        if state is not None:
+            tl = state.timeline(w.wid).clone()
+            tl.advance(now)
+        else:
+            tl = WorkerTimeline(now)
+        timelines[w.wid] = tl
     orders = {w.wid: 1 for w in workers}
     entries: list[ScheduleEntry] = []
 
     for batch_id, (key, members) in enumerate(ordered_groups):
         app = apps[members[0].app]
-        best = None  # (utility, -latency, worker, scaled_profile)
+        # Candidate key: (utility, -scaled single-request latency, model
+        # name, -worker id).  Utility ties prefer the lower-latency
+        # placement (frees budget for later groups), then the
+        # lexicographically LARGER model name — the same rule as the
+        # single-worker fast-path grouped selection (AppArrays.argbest) —
+        # and finally the lower worker id for determinism.
+        best = None  # (key, worker, scaled_profile)
         for w in workers:
             tl = timelines[w.wid]
             for m in app.models:
@@ -94,7 +135,7 @@ def multiworker_schedule(
                     acc = estimate_accuracy(r, app, m, acc_mode)
                     total += eq2_utility(acc, r.deadline_s, start, lat, app.penalty_fn)
                 u = total / len(members)
-                cand = (u, -lat, -w.wid, m.name)
+                cand = (u, -sm.latency_s, m.name, -w.wid)
                 if best is None or cand > best[0]:
                     best = (cand, w, sm)
         _, w, sm = best

@@ -23,7 +23,13 @@ from repro.core.ordering import ORDERINGS
 from repro.core.selection import locally_optimal, max_accuracy
 from repro.core.types import Application, Request, Schedule, ScheduleEntry
 
-__all__ = ["SchedulerPolicy", "make_policy", "POLICY_NAMES", "schedule_window"]
+__all__ = [
+    "SchedulerPolicy",
+    "make_policy",
+    "POLICY_NAMES",
+    "schedule_window",
+    "effective_apps",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,7 +53,13 @@ class SchedulerPolicy:
         requests: Sequence[Request],
         apps: Mapping[str, Application],
         now: float,
+        state=None,
+        arrays=None,
     ) -> Schedule:
+        """One window pass.  ``state`` (streaming.StreamingState) seeds the
+        worker timeline with carried backlog + residency (peeked via a
+        clone, never committed); ``arrays`` is an optional precomputed
+        ``fastpath.WindowArrays`` (fast path only)."""
         t0 = time.perf_counter()
         if self.grouped:
             sched = grouped_schedule(
@@ -58,6 +70,8 @@ class SchedulerPolicy:
                 data_aware=self.data_aware,
                 split_by_label=self.split_by_label,
                 use_fastpath=self.fastpath,
+                arrays=arrays,
+                state=state,
             )
         elif self.fastpath:
             from repro.core.fastpath import fast_per_request_schedule
@@ -69,9 +83,11 @@ class SchedulerPolicy:
                 ordering=self.ordering,
                 selection=self.selection,
                 data_aware=self.data_aware,
+                arrays=arrays,
+                state=state,
             )
         else:
-            sched = self._per_request_schedule(requests, apps, now)
+            sched = self._per_request_schedule(requests, apps, now, state=state)
         sched.scheduling_overhead_s = time.perf_counter() - t0
         return sched
 
@@ -80,6 +96,7 @@ class SchedulerPolicy:
         requests: Sequence[Request],
         apps: Mapping[str, Application],
         now: float,
+        state=None,
     ) -> Schedule:
         """Scalar reference path: O(R * M) per-pair estimate/utility calls."""
         acc_mode = "sharpened" if self.data_aware else "profiled"
@@ -89,7 +106,11 @@ class SchedulerPolicy:
             "max_accuracy": max_accuracy,
         }[self.selection]
         ordered = order_fn(requests, apps, now, data_aware=self.data_aware)
-        tl = WorkerTimeline(now)
+        if state is not None:
+            tl = state.timeline(0).clone()
+            tl.advance(now)
+        else:
+            tl = WorkerTimeline(now)
         entries = []
         for k, r in enumerate(ordered):
             app = apps[r.app]
@@ -133,6 +154,36 @@ def make_policy(name: str, **overrides) -> SchedulerPolicy:
     return dataclasses.replace(base, **overrides)
 
 
+def effective_apps(
+    apps: Mapping[str, Application],
+    sneakpeeks=None,
+    short_circuit: bool = False,
+) -> Mapping[str, Application]:
+    """The application map the policy actually schedules against.
+
+    With ``short_circuit`` the SneakPeek profiles are appended to each
+    application's variant list (zero latency, profiled accuracy) so the
+    policy can choose them like any other model (§V-C1).  Deterministic in
+    its inputs — streaming callers compute it ONCE and reuse it across
+    windows (rebuilding per window would also defeat the fast path's
+    per-Application ``AppArrays`` memoization).
+    """
+    if not (short_circuit and sneakpeeks):
+        return apps
+    out = {}
+    for name, app in apps.items():
+        sp = sneakpeeks.get(name)
+        if sp is None:
+            out[name] = app
+            continue
+        prof = sp.profile()
+        if any(m.name == prof.name for m in app.models):
+            out[name] = app
+        else:
+            out[name] = dataclasses.replace(app, models=app.models + [prof])
+    return out
+
+
 def schedule_window(
     policy: SchedulerPolicy,
     requests: Sequence[Request],
@@ -140,29 +191,41 @@ def schedule_window(
     now: float,
     sneakpeeks=None,
     short_circuit: bool = False,
+    workers=None,
+    state=None,
+    arrays=None,
 ) -> tuple[Schedule, Mapping[str, Application]]:
     """One scheduling-window pass: SneakPeek stage (if any) then the policy.
 
-    With ``short_circuit`` the SneakPeek profiles are appended to each
-    application's variant list (zero latency, profiled accuracy) so the
-    policy can choose them like any other model (§V-C1).  Returns the
-    schedule and the (possibly augmented) application map.
+    ``workers`` (a sequence of ``multiworker.Worker``) generalizes any
+    policy to the paper's §VII multi-worker placement: grouping /
+    data-awareness / label-splitting / fastpath come from the policy,
+    placement from ``multiworker_schedule`` (``per_request`` for the
+    ungrouped policies).  ``state`` carries streaming backlog + residency;
+    ``arrays`` a precomputed ``fastpath.WindowArrays``.  Returns the
+    schedule and the (possibly short-circuit-augmented) application map.
     """
     from repro.core.sneakpeek import attach_sneakpeek
 
     if sneakpeeks:
         attach_sneakpeek(requests, apps, sneakpeeks)
-    eff_apps = apps
-    if short_circuit and sneakpeeks:
-        eff_apps = {}
-        for name, app in apps.items():
-            sp = sneakpeeks.get(name)
-            if sp is None:
-                eff_apps[name] = app
-                continue
-            prof = sp.profile()
-            if any(m.name == prof.name for m in app.models):
-                eff_apps[name] = app
-            else:
-                eff_apps[name] = dataclasses.replace(app, models=app.models + [prof])
-    return policy.schedule(requests, eff_apps, now), eff_apps
+    eff_apps = effective_apps(apps, sneakpeeks, short_circuit)
+    if workers:
+        from repro.core.multiworker import multiworker_schedule
+
+        t0 = time.perf_counter()
+        sched = multiworker_schedule(
+            requests,
+            eff_apps,
+            workers,
+            now,
+            data_aware=policy.data_aware,
+            split_by_label=policy.split_by_label,
+            per_request=not policy.grouped,
+            fastpath=policy.fastpath,
+            state=state,
+            arrays=arrays,
+        )
+        sched.scheduling_overhead_s = time.perf_counter() - t0
+        return sched, eff_apps
+    return policy.schedule(requests, eff_apps, now, state=state, arrays=arrays), eff_apps

@@ -7,10 +7,15 @@ Two granularities:
     close, scored with *oracle* utilities (Eq. 9 with one-hot true-label
     theta — the paper's "true model accuracy") and realized completion
     times from the worker timeline.  Deterministic.
-  * ``Simulation`` — multi-window streaming execution with carried-over
-    worker backlog and sampled per-request outcomes (correct with
+  * ``Simulation`` — multi-window streaming execution over a persistent
+    ``StreamingState``: per-worker backlog AND model residency carry
+    across windows (a model left resident by window w is swap-free in
+    window w+1), with sampled per-request outcomes (correct with
     probability recall[true_label]); used by the end-to-end examples and
-    the serving runtime tests.
+    the serving runtime tests.  Optionally multi-worker (``workers=``)
+    and multi-window-batched (``prebatch=``: several windows' Eq. 9/12
+    matrices computed as one stacked program, see
+    ``fastpath.precompute_windows``).
 """
 from __future__ import annotations
 
@@ -20,7 +25,8 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core.evaluation import EvalResult, evaluate
-from repro.core.scheduler import SchedulerPolicy, schedule_window
+from repro.core.scheduler import SchedulerPolicy, effective_apps, schedule_window
+from repro.core.streaming import StreamingState
 from repro.core.types import Application, Request, Schedule
 
 __all__ = ["WindowResult", "run_window", "Simulation"]
@@ -54,7 +60,28 @@ def run_window(
 
 
 class Simulation:
-    """Streaming multi-window simulation with sampled inference outcomes."""
+    """Streaming multi-window simulation with sampled inference outcomes.
+
+    Scheduling happens at window close against the CARRIED state: each
+    worker's next batch starts at ``max(busy_until, window_close)`` (per
+    worker — a backlogged worker never serializes its idle peers) and a
+    model left resident by an earlier window is not re-charged its swap
+    latency.  ``evaluate(..., state=...)`` commits realized executions
+    back to the state.
+
+    Args:
+      workers: optional ``multiworker.Worker`` pool — generalizes the
+        policy to §VII multi-worker placement (Eq. 15).
+      num_workers: pool size when ``workers`` is not given (homogeneous
+        ids 0..n-1; single-worker policies only ever use worker 0).
+      memory_capacity_bytes: per-worker residency capacity (None = the
+        paper's conservative single-slot model).
+      prebatch: >1 stacks that many upcoming windows' Eq. 9/Eq. 12
+        matrices into one batched program (``fastpath.precompute_windows``)
+        before the sequential scheduling pass; ``prebatch_backend`` picks
+        "numpy" (default, bit-compatible) or "jax" (jitted,
+        device-resident, float32 on default configs).
+    """
 
     def __init__(
         self,
@@ -64,6 +91,11 @@ class Simulation:
         sneakpeeks=None,
         short_circuit: bool = False,
         seed: int = 0,
+        workers=None,
+        num_workers: int = 1,
+        memory_capacity_bytes: int | None = None,
+        prebatch: int = 0,
+        prebatch_backend: str = "numpy",
     ):
         self.policy = policy
         self.apps = dict(apps)
@@ -71,65 +103,114 @@ class Simulation:
         self.sneakpeeks = sneakpeeks
         self.short_circuit = short_circuit
         self.rng = np.random.default_rng(seed)
-        self.backlog_t = 0.0  # worker busy-until time carried across windows
+        self.workers = list(workers) if workers else None
+        self.prebatch = int(prebatch)
+        self.prebatch_backend = prebatch_backend
+        n = len(self.workers) if self.workers else max(1, num_workers)
+        self.state = StreamingState(
+            num_workers=n,
+            now=0.0,
+            memory_capacity_bytes=memory_capacity_bytes,
+            worker_ids=[w.wid for w in self.workers] if self.workers else None,
+        )
+        self._num_workers = n
+        # Scheduled against a fixed app map: short-circuit augmentation is
+        # deterministic, so it must not be rebuilt per window (fresh
+        # Application objects would also defeat AppArrays memoization).
+        self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
         self.log: list[dict] = []
 
-    def run(self, requests: Sequence[Request], horizon_s: float | None = None) -> dict:
-        """Consume a request trace; returns aggregate realized metrics."""
-        if not requests:
-            return {"utility": 0.0, "accuracy": 0.0, "violations": 0, "count": 0}
+    @property
+    def backlog_t(self) -> float:
+        """Busiest worker's busy-until time (legacy scalar view of the state)."""
+        return max(tl.t for _, tl in self.state.items())
+
+    def _window_batches(self, requests: Sequence[Request], horizon_s: float | None):
         requests = sorted(requests, key=lambda r: r.arrival_s)
         t_end = horizon_s if horizon_s is not None else requests[-1].arrival_s
         n_windows = int(np.ceil((t_end + 1e-9) / self.window_s)) or 1
-        total_u, total_correct, violations, count = 0.0, 0.0, 0, 0
         idx = 0
+        out: list[tuple[int, list[Request]]] = []
         for w in range(n_windows):
             window_close = (w + 1) * self.window_s
             batch = []
             while idx < len(requests) and requests[idx].arrival_s <= window_close:
                 batch.append(requests[idx])
                 idx += 1
-            if not batch:
-                continue
-            # Scheduling happens at window close; execution starts after any
-            # backlog from previous windows.
-            now = max(window_close, self.backlog_t)
-            sched, eff_apps = schedule_window(
-                self.policy,
-                batch,
-                self.apps,
-                now,
-                sneakpeeks=self.sneakpeeks,
-                short_circuit=self.short_circuit,
-            )
-            res = evaluate(sched, eff_apps, now, acc_mode="oracle")
-            if len(res.completions):
-                self.backlog_t = float(res.completions.max())
-            # Sample realized outcomes for accuracy accounting.
-            for e, u in zip(sched.sorted_entries(), res.utilities):
-                r = e.request
-                app = eff_apps[r.app]
-                profile = app.model(e.model)
-                p_correct = (
-                    profile.recalls[r.true_label]
-                    if r.true_label is not None
-                    else profile.profiled_accuracy()
+            if batch:
+                out.append((w, batch))
+        return out
+
+    def run(self, requests: Sequence[Request], horizon_s: float | None = None) -> dict:
+        """Consume a request trace; returns aggregate realized metrics."""
+        if not requests:
+            return {"utility": 0.0, "accuracy": 0.0, "violations": 0, "count": 0}
+        from repro.core.sneakpeek import attach_sneakpeek
+
+        windows = self._window_batches(requests, horizon_s)
+        total_u, total_correct, violations, count = 0.0, 0.0, 0, 0
+        chunk = max(1, self.prebatch)
+        for c0 in range(0, len(windows), chunk):
+            group = windows[c0 : c0 + chunk]
+            # SneakPeek stage per window (exactly once per request — the
+            # evidence draw is stochastic).
+            if self.sneakpeeks:
+                for _, batch in group:
+                    attach_sneakpeek(batch, self.apps, self.sneakpeeks)
+            arrays_list = [None] * len(group)
+            if self.prebatch > 1:
+                from repro.core.fastpath import precompute_windows
+
+                arrays_list = precompute_windows(
+                    [(batch, (w + 1) * self.window_s) for w, batch in group],
+                    self._eff_apps,
+                    data_aware=self.policy.data_aware,
+                    backend=self.prebatch_backend,
                 )
-                correct = self.rng.random() < p_correct
-                total_correct += float(correct)
-                total_u += u
-                if e.est_completion_s > r.deadline_s:
-                    violations += 1
-                count += 1
-            self.log.append(
-                {
-                    "window": w,
-                    "n": len(batch),
-                    "utility": res.mean_utility,
-                    "violations": res.violations,
-                    "overhead_s": sched.scheduling_overhead_s,
-                }
-            )
+            for (w, batch), arrays in zip(group, arrays_list):
+                window_close = (w + 1) * self.window_s
+                carried = self.state.backlog_s(window_close)
+                sched, eff_apps = schedule_window(
+                    self.policy,
+                    batch,
+                    self._eff_apps,
+                    window_close,
+                    workers=self.workers,
+                    state=self.state,
+                    arrays=arrays,
+                )
+                # The state owns the pool: every timeline (idle or not)
+                # counts toward the logged utilization.
+                res = evaluate(
+                    sched, eff_apps, window_close, acc_mode="oracle", state=self.state
+                )
+                # Sample realized outcomes for accuracy accounting.
+                for e, u in zip(sched.sorted_entries(), res.utilities):
+                    r = e.request
+                    app = eff_apps[r.app]
+                    profile = app.model(e.model)
+                    p_correct = (
+                        profile.recalls[r.true_label]
+                        if r.true_label is not None
+                        else profile.profiled_accuracy()
+                    )
+                    correct = self.rng.random() < p_correct
+                    total_correct += float(correct)
+                    total_u += u
+                    if e.est_completion_s > r.deadline_s:
+                        violations += 1
+                    count += 1
+                self.log.append(
+                    {
+                        "window": w,
+                        "n": len(batch),
+                        "utility": res.mean_utility,
+                        "violations": res.violations,
+                        "overhead_s": sched.scheduling_overhead_s,
+                        "backlog_s": carried,
+                        "utilization": res.utilization,
+                    }
+                )
         return {
             "utility": total_u / max(1, count),
             "accuracy": total_correct / max(1, count),

@@ -1,0 +1,103 @@
+"""Cross-window streaming state (the substrate of every streaming experiment).
+
+A single scheduling window is stateless: the policy builds fresh
+``WorkerTimeline``s at window close and the evaluator replays the schedule
+on fresh timelines.  Streaming execution is not — two pieces of worker
+state survive window boundaries and change both the schedule (estimated
+swap costs) and the realized metrics:
+
+  * **Backlog**: each worker's busy-until time.  A window's batches start
+    at ``max(busy_until, window_close)`` *per worker*; collapsing the pool
+    into one scalar backlog serializes multi-worker schedules.
+  * **Residency**: the models left in each worker's memory.  Rebuilding
+    timelines fresh each window re-charges the model swap on every window
+    boundary, silently cancelling the swap amortization that grouped
+    scheduling exists to win.
+
+``StreamingState`` owns one persistent ``WorkerTimeline`` per worker and
+is threaded through ``Simulation``, ``evaluate`` and the serving loop:
+schedulers *peek* it (via ``clone()``d timelines, so speculative placement
+never mutates it) and ``evaluate(..., state=...)`` *commits* realized
+executions to it.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Mapping, Sequence
+
+from repro.core.evaluation import WorkerTimeline
+
+__all__ = ["StreamingState"]
+
+
+class StreamingState:
+    """Per-worker timelines (busy-until + LRU residency) carried across windows."""
+
+    def __init__(
+        self,
+        num_workers: int = 1,
+        now: float = 0.0,
+        memory_capacity_bytes: int | None = None,
+        worker_ids: Sequence[int] | None = None,
+    ):
+        """``worker_ids`` pins the pool to explicit ids (heterogeneous
+        pools whose Worker.wid values are not 0..n-1); otherwise ids are
+        0..num_workers-1."""
+        ids = list(worker_ids) if worker_ids is not None else list(range(num_workers))
+        if not ids:
+            raise ValueError("streaming state needs at least one worker")
+        self.capacity = memory_capacity_bytes
+        self._now = float(now)
+        self.timelines: dict[int, WorkerTimeline] = {
+            w: WorkerTimeline(now, memory_capacity_bytes) for w in ids
+        }
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.timelines)
+
+    def timeline(self, wid: int) -> WorkerTimeline:
+        """The persistent timeline of worker ``wid`` (created on demand)."""
+        tl = self.timelines.get(wid)
+        if tl is None:
+            tl = WorkerTimeline(self._now, self.capacity)
+            self.timelines[wid] = tl
+        return tl
+
+    def advance(self, now: float) -> None:
+        """Move the clock: idle workers become ready at ``now``; busy
+        workers keep their backlog (their next batch starts later)."""
+        self._now = max(self._now, float(now))
+        for tl in self.timelines.values():
+            tl.advance(now)
+
+    def backlog_s(self, now: float) -> float:
+        """Worst-case carried backlog: how far the busiest worker's
+        busy-until time extends past ``now`` (0 when all are idle)."""
+        return max(0.0, max(tl.t for tl in self.timelines.values()) - float(now))
+
+    def resident_models(self) -> dict[int, list[str]]:
+        """Per-worker resident model names, LRU order (oldest first)."""
+        return {w: list(tl._resident) for w, tl in self.timelines.items()}
+
+    def register_sizes(self, sizes: Mapping[str, int]) -> None:
+        for tl in self.timelines.values():
+            tl.register_sizes(sizes)
+
+    def clone(self) -> "StreamingState":
+        """Deep copy for speculative scheduling: mutating the clone's
+        timelines leaves the committed state untouched."""
+        out = StreamingState.__new__(StreamingState)
+        out.capacity = self.capacity
+        out._now = self._now
+        out.timelines = {w: tl.clone() for w, tl in self.timelines.items()}
+        return out
+
+    def items(self) -> Iterator[tuple[int, WorkerTimeline]]:
+        return iter(sorted(self.timelines.items()))
+
+    def __repr__(self) -> str:
+        parts = ", ".join(
+            f"w{w}: t={tl.t:.4f} resident={list(tl._resident)}"
+            for w, tl in sorted(self.timelines.items())
+        )
+        return f"StreamingState({parts})"

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.residency import evict_lru
 from repro.core.types import Request, Schedule
 from repro.models import LM
 
@@ -36,10 +37,12 @@ class WindowQueue:
         self._pending.append(request)
 
     def drain_window(self, now: float) -> list[Request]:
-        """Requests that arrived by ``now`` (window close)."""
+        """Requests that arrived by ``now`` (window close), ordered by
+        (arrival, rid) — the rid tie-break makes simultaneous arrivals
+        drain deterministically regardless of submission order."""
         ready = [r for r in self._pending if r.arrival_s <= now]
         self._pending = [r for r in self._pending if r.arrival_s > now]
-        return sorted(ready, key=lambda r: r.arrival_s)
+        return sorted(ready, key=lambda r: (r.arrival_s, r.rid))
 
     def __len__(self):
         return len(self._pending)
@@ -50,7 +53,12 @@ class SwapManager:
 
     ``load(name)`` returns the simulated swap latency (0 when resident)
     and updates residency; actual weight materialization is delegated to
-    the executor's lazy param store.
+    the executor's lazy param store.  Eviction follows the shared rule in
+    ``repro.core.residency`` — the same one the scheduler's
+    ``WorkerTimeline`` charges swaps by — so the runtime's realized swap
+    pattern matches the scheduler's estimates: oldest-first, and the model
+    being loaded is never evicted (a variant larger than capacity resides
+    alone rather than thrashing).
     """
 
     def __init__(self, capacity_bytes: int | None, sizes: Mapping[str, int],
@@ -73,12 +81,11 @@ class SwapManager:
             self._resident.move_to_end(name)
             return 0.0
         self.swap_count += 1
-        size = self.sizes.get(name, 0)
-        if self.capacity is not None:
-            while self._resident and self.resident_bytes() + size > self.capacity:
-                self._resident.popitem(last=False)
-                self.evictions += 1
-        self._resident[name] = size
+        self._resident[name] = self.sizes.get(name, 0)
+        order = list(self._resident)
+        for victim in evict_lru(order, self.sizes, self.capacity, protect=name):
+            del self._resident[victim]
+            self.evictions += 1
         return self.load_latency.get(name, 0.0)
 
 
@@ -188,19 +195,20 @@ class LMExecutor:
             ):
                 j += 1
             batch = entries[i : j + 1]
-            prompts = [prompt_fn(e.request) for e in batch]
-            maxlen = max(p.shape[0] for p in prompts)
-            padded = np.zeros((len(prompts), maxlen), np.int32)
-            for k, p in enumerate(prompts):
-                padded[k, :p.shape[0]] = p
             if batch[0].model.endswith(":short_circuit"):
-                # §V-C1: answered by the SneakPeek stage, no model execution.
+                # §V-C1: answered by the SneakPeek stage — no model
+                # execution, no swap, no prompt tokenization/padding.
                 reports.append(ExecutionReport(
                     request_ids=[e.request.rid for e in batch], model=batch[0].model,
                     batch_size=len(batch), swap_s=0.0, prefill_s=0.0, decode_s=0.0,
                     tokens=np.zeros((len(batch), 0), np.int32),
                     predictions=[None] * len(batch)))
             else:
+                prompts = [prompt_fn(e.request) for e in batch]
+                maxlen = max(p.shape[0] for p in prompts)
+                padded = np.zeros((len(prompts), maxlen), np.int32)
+                for k, p in enumerate(prompts):
+                    padded[k, :p.shape[0]] = p
                 reports.append(self.run_batch(
                     batch[0].model, padded, [e.request.rid for e in batch], class_token_ids))
             i = j + 1

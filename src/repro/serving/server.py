@@ -17,7 +17,8 @@ from typing import Callable, Mapping, Optional
 import numpy as np
 
 from repro.core.evaluation import evaluate
-from repro.core.scheduler import SchedulerPolicy, schedule_window
+from repro.core.scheduler import SchedulerPolicy, effective_apps, schedule_window
+from repro.core.streaming import StreamingState
 from repro.core.types import Application, Request
 from repro.serving.runtime import LMExecutor, WindowQueue
 
@@ -48,7 +49,12 @@ class EdgeServer:
         short_circuit: bool = False,
         window_s: float = 0.1,
         prompt_fn: Optional[Callable[[Request], np.ndarray]] = None,
+        workers=None,
+        memory_capacity_bytes: int | None = None,
     ):
+        """``workers`` (a sequence of ``core.multiworker.Worker``) switches
+        scheduling to §VII multi-worker placement; without it the policy
+        schedules the single worker 0."""
         self.apps = dict(apps)
         self.policy = policy
         self.executor = executor
@@ -58,6 +64,16 @@ class EdgeServer:
         self.prompt_fn = prompt_fn
         self.stats = ServeStats()
         self._utility_sum = 0.0
+        self.workers = list(workers) if workers else None
+        self.num_workers = len(self.workers) if self.workers else 1
+        # Streaming state: per-worker backlog + model residency carried
+        # across windows (scheduling peeks it, evaluation commits to it).
+        self.state = StreamingState(
+            num_workers=self.num_workers,
+            memory_capacity_bytes=memory_capacity_bytes,
+            worker_ids=[w.wid for w in self.workers] if self.workers else None,
+        )
+        self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
 
     def submit(self, request: Request):
         self.queue.submit(request)
@@ -67,12 +83,16 @@ class EdgeServer:
         requests = self.queue.drain_window(now)
         if not requests:
             return None
+        from repro.core.sneakpeek import attach_sneakpeek
+
+        if self.sneakpeeks:
+            attach_sneakpeek(requests, self.apps, self.sneakpeeks)
         t0 = time.perf_counter()
         sched, eff_apps = schedule_window(
-            self.policy, requests, self.apps, now,
-            sneakpeeks=self.sneakpeeks, short_circuit=self.short_circuit,
+            self.policy, requests, self._eff_apps, now,
+            workers=self.workers, state=self.state,
         )
-        res = evaluate(sched, eff_apps, now, acc_mode="oracle")
+        res = evaluate(sched, eff_apps, now, acc_mode="oracle", state=self.state)
         self.stats.windows += 1
         self.stats.requests += len(requests)
         self.stats.violations += res.violations

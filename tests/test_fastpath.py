@@ -7,10 +7,14 @@ import pytest
 
 from repro.core import (
     POLICY_NAMES,
+    StreamingState,
     WindowArrays,
+    Worker,
     evaluate,
     grouped_schedule,
     make_policy,
+    multiworker_schedule,
+    precompute_windows,
 )
 from repro.core.bruteforce import brute_force_groups
 from repro.core.evaluation import WorkerTimeline, estimate_accuracy
@@ -81,6 +85,160 @@ def test_brute_force_arrays_memo_is_exact():
     with_memo = brute_force_groups(groups, apps, 0.1, acc_mode="sharpened", arrays=wa)
     without = brute_force_groups(groups, apps, 0.1, acc_mode="sharpened")
     assert _sig(with_memo) == _sig(without)
+
+
+# ------------------------------------------------------------- multiworker
+
+
+# Heterogeneous pools: uniform, speed-skewed, swap-link-skewed, larger mixed.
+WORKER_SCENARIOS = [
+    [Worker(0), Worker(1)],
+    [Worker(0, speed=0.5), Worker(1, speed=2.0), Worker(2, speed=1.0, load_scale=3.0)],
+    [Worker(0, speed=4.0, load_scale=0.5), Worker(1)],
+    [Worker(0), Worker(1, speed=2.0), Worker(2, speed=3.0), Worker(3, load_scale=2.0)],
+]
+
+
+@pytest.mark.parametrize("scenario", range(len(WORKER_SCENARIOS)))
+@pytest.mark.parametrize(
+    "variant",
+    [
+        {},
+        {"data_aware": True},
+        {"data_aware": True, "split_by_label": True},
+        {"per_request": True},
+    ],
+    ids=["grouped", "aware", "aware-split", "per-request"],
+)
+def test_multiworker_parity(scenario, variant):
+    """Fast Eq. 15 placement == scalar reference: identical (worker, model,
+    order, batch_id) assignments across heterogeneous pools and variants."""
+    workers = WORKER_SCENARIOS[scenario]
+    for seed in range(3):
+        reqs, apps = _window(per_app=6, seed=seed, theta="some")
+        fast = multiworker_schedule(reqs, apps, workers, 0.1, fastpath=True, **variant)
+        slow = multiworker_schedule(reqs, apps, workers, 0.1, fastpath=False, **variant)
+        assert _sig(fast) == _sig(slow)
+        rf = evaluate(fast, apps, 0.1, acc_mode="oracle")
+        rs = evaluate(slow, apps, 0.1, acc_mode="oracle")
+        np.testing.assert_allclose(rf.utilities, rs.utilities, atol=1e-9, rtol=0)
+
+
+def test_multiworker_parity_with_carried_state():
+    """Parity must survive a carried StreamingState: both paths see the
+    same per-worker backlog and residency seeds."""
+    workers = [Worker(0), Worker(1, speed=2.0)]
+    reqs, apps = _window(per_app=5, seed=0, theta="all")
+    state_f, state_s = StreamingState(num_workers=2), StreamingState(num_workers=2)
+    for st in (state_f, state_s):
+        warm = multiworker_schedule(reqs, apps, workers, 0.1, state=st)
+        evaluate(warm, apps, 0.1, state=st)
+    reqs2, _ = _window(per_app=5, seed=1, theta="all")
+    fast = multiworker_schedule(reqs2, apps, workers, 0.2, state=state_f, fastpath=True)
+    slow = multiworker_schedule(reqs2, apps, workers, 0.2, state=state_s, fastpath=False)
+    assert _sig(fast) == _sig(slow)
+    # Scheduling only PEEKS the state: neither call committed anything.
+    for a, b in zip(state_f.timelines.values(), state_s.timelines.values()):
+        assert a.t == b.t and list(a._resident) == list(b._resident)
+
+
+def test_multiworker_tiebreak_rule():
+    """Aligned tie-break (utility, -scaled latency, name, -wid): equal-
+    utility candidates resolve to the lower-latency model, then the
+    lexicographically larger name, then the lower worker id."""
+    from repro.core import Application, ModelProfile, Request
+
+    recalls = np.array([0.8, 0.8])
+    # Same recalls => same utility when both models meet the deadline;
+    # m-fast has the lower latency and must win on both paths.
+    app = Application(
+        name="tie",
+        models=[
+            ModelProfile("m-slow", recalls=recalls, latency_s=0.02),
+            ModelProfile("m-fast", recalls=recalls, latency_s=0.01),
+        ],
+        penalty="step",
+    )
+    reqs = [Request(rid=0, app="tie", arrival_s=0.0, deadline_s=1.0, true_label=0)]
+    workers = [Worker(0), Worker(1)]
+    for fastpath in (True, False):
+        sched = multiworker_schedule(reqs, {"tie": app}, workers, 0.0, fastpath=fastpath)
+        e = sched.entries[0]
+        assert (e.model, e.worker) == ("m-fast", 0), fastpath
+    # Full latency tie: larger name wins (the argbest rule), worker 0 on a
+    # worker tie.
+    app2 = Application(
+        name="tie",
+        models=[
+            ModelProfile("m-a", recalls=recalls, latency_s=0.01),
+            ModelProfile("m-b", recalls=recalls, latency_s=0.01),
+        ],
+        penalty="step",
+    )
+    for fastpath in (True, False):
+        sched = multiworker_schedule(reqs, {"tie": app2}, workers, 0.0, fastpath=fastpath)
+        e = sched.entries[0]
+        assert (e.model, e.worker) == ("m-b", 0), fastpath
+
+
+# --------------------------------------------------------------- streaming
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_streaming_state_parity(policy):
+    """With a carried state, fast and scalar single-worker paths still
+    produce identical schedules (backlog + residency seeds agree)."""
+    reqs, apps = _window(per_app=5, seed=0, theta="some")
+    st_f, st_s = StreamingState(), StreamingState()
+    for st in (st_f, st_s):
+        warm = make_policy(policy).schedule(reqs, apps, 0.1, state=st)
+        evaluate(warm, apps, 0.1, state=st)
+    reqs2, _ = _window(per_app=5, seed=1, theta="some")
+    fast = make_policy(policy).schedule(reqs2, apps, 0.2, state=st_f)
+    slow = make_policy(policy, fastpath=False).schedule(reqs2, apps, 0.2, state=st_s)
+    assert _sig(fast) == _sig(slow)
+
+
+def test_precompute_windows_matches_lazy():
+    """The stacked multi-window program fills the same caches the lazy
+    per-window computation would (numpy backend: row-identical)."""
+    apps = None
+    wins = []
+    for seed in range(3):
+        reqs, apps = _window(per_app=4, seed=seed, theta="some")
+        wins.append((reqs, 0.1 * (seed + 1)))
+    lazy = [WindowArrays(reqs, apps, now) for reqs, now in wins]
+    pre = precompute_windows(wins, apps, data_aware=True, backend="numpy")
+    for wa_l, wa_p in zip(lazy, pre):
+        for app_name in wa_l.req_idx:
+            np.testing.assert_array_equal(
+                wa_p._acc_cache[(app_name, "sharpened")],
+                wa_l.acc_matrix(app_name, "sharpened"),
+            )
+        np.testing.assert_allclose(
+            wa_p._prio_cache[True], wa_l.priorities(True), atol=1e-12, rtol=0
+        )
+    # Scheduling from precomputed arrays == scheduling lazily.
+    for (reqs, now), wa_p in zip(wins, pre):
+        with_pre = make_policy("SneakPeek").schedule(reqs, apps, now, arrays=wa_p)
+        without = make_policy("SneakPeek").schedule(reqs, apps, now)
+        assert _sig(with_pre) == _sig(without)
+
+
+def test_precompute_windows_jax_backend_close():
+    """The jitted device program agrees with numpy to float32 tolerance
+    (falls back to numpy silently when JAX is unavailable)."""
+    wins = []
+    apps = None
+    for seed in range(2):
+        reqs, apps = _window(per_app=3, seed=seed, theta="all")
+        wins.append((reqs, 0.1 * (seed + 1)))
+    pre_np = precompute_windows(wins, apps, data_aware=True, backend="numpy")
+    pre_jx = precompute_windows(wins, apps, data_aware=True, backend="jax")
+    for a, b in zip(pre_np, pre_jx):
+        np.testing.assert_allclose(
+            a._prio_cache[True], b._prio_cache[True], atol=1e-4, rtol=1e-5
+        )
 
 
 # ---------------------------------------------------------------- Eq. 9/12

@@ -294,3 +294,110 @@ def test_multi_window_simulation_backlog():
     assert 0.0 <= out["utility"] <= 1.0
     assert len(sim.log) == 3  # one entry per non-empty window
     assert 0.0 <= out["accuracy"] <= 1.0
+
+
+# ---------------------------------------------------------------- streaming
+
+
+def _one_model_app(load=0.05, lat=0.01):
+    return _mk_app("a", [([0.9, 0.9], lat)], load=load)
+
+
+def test_simulation_preserves_residency_across_windows():
+    """A model left resident by window w must NOT be re-charged its swap
+    latency in window w+1 (regression: timelines were rebuilt fresh at
+    every window boundary, overcharging every boundary by the swap)."""
+    from repro.core import Simulation
+
+    apps = {"a": _one_model_app(load=0.05, lat=0.01)}
+    reqs = [
+        Request(rid=0, app="a", arrival_s=0.05, deadline_s=10.0, true_label=0),
+        Request(rid=1, app="a", arrival_s=0.15, deadline_s=10.0, true_label=0),
+    ]
+    sim = Simulation(make_policy("LO-EDF"), apps, window_s=0.1, seed=0)
+    sim.run(reqs)
+    # Window 1: swap (0.05) + lat (0.01) starting at 0.1 -> busy until 0.16.
+    # Window 2 closes at 0.2 with the model still resident: just 0.01.
+    assert sim.state.timeline(0).t == pytest.approx(0.21)
+    assert sim.state.resident_models()[0] == ["a-m0"]
+    # Per-window utility of window 2 must reflect the swap-free run.
+    assert sim.log[1]["backlog_s"] == 0.0
+
+
+def test_simulation_per_worker_backlog_carryover():
+    """Multi-worker streaming: each worker's backlog carries independently
+    (regression: a single scalar backlog serialized the whole pool)."""
+    from repro.core import Simulation
+
+    apps = {"a": _one_model_app(load=0.0, lat=0.15)}
+    # Window 1 (closes 0.1): r0 -> worker 0 (0.10-0.25); r1 on worker 0
+    # would miss its 0.3 deadline (0.40), so it spreads to worker 1
+    # (0.10-0.25).  Window 2 (closes 0.2): both workers resume from their
+    # OWN 0.25 backlog; r10 -> worker 0 (0.25-0.40), r11 on worker 0 would
+    # miss 0.45 (0.55) -> worker 1 (0.25-0.40).
+    reqs = [
+        Request(rid=i, app="a", arrival_s=0.01 * i, deadline_s=0.3, true_label=0)
+        for i in range(2)
+    ]
+    reqs += [
+        Request(rid=10 + i, app="a", arrival_s=0.11, deadline_s=0.45, true_label=0)
+        for i in range(2)
+    ]
+    sim = Simulation(
+        make_policy("LO-EDF"), apps, window_s=0.1, seed=0,
+        workers=[Worker(0), Worker(1)],
+    )
+    out = sim.run(reqs)
+    t0, t1 = sim.state.timeline(0).t, sim.state.timeline(1).t
+    assert t0 == pytest.approx(0.40) and t1 == pytest.approx(0.40)
+    assert sim.log[1]["backlog_s"] == pytest.approx(0.05)  # per-worker carry
+    assert out["violations"] == 0  # serialized pools would miss deadlines
+
+
+def test_evaluate_num_workers_counts_idle_workers():
+    """Dead-parameter regression: num_workers now pre-creates timelines so
+    an idle pool drags utilization down."""
+    apps = {"a": _one_model_app()}
+    reqs = [Request(rid=0, app="a", arrival_s=0.0, deadline_s=1.0, true_label=0)]
+    entries = [ScheduleEntry(request=reqs[0], model="a-m0", order=1, worker=0)]
+    res1 = evaluate(Schedule(entries=entries), apps, 0.0, num_workers=1)
+    res4 = evaluate(Schedule(entries=entries), apps, 0.0, num_workers=4)
+    assert set(res1.worker_busy_s) == {0}
+    assert set(res4.worker_busy_s) == {0, 1, 2, 3}
+    assert res4.worker_busy_s[1] == 0.0
+    assert res1.utilization == pytest.approx(1.0)
+    assert res4.utilization == pytest.approx(0.25)
+
+
+def test_evaluate_commits_to_streaming_state():
+    """evaluate(..., state=...) replays onto the persistent timelines:
+    backlog and residency survive for the next window."""
+    from repro.core import StreamingState
+
+    apps = {"a": _one_model_app(load=0.05, lat=0.01)}
+    state = StreamingState(num_workers=1)
+    r0 = Request(rid=0, app="a", arrival_s=0.0, deadline_s=1.0, true_label=0)
+    e0 = ScheduleEntry(request=r0, model="a-m0", order=1, worker=0)
+    res = evaluate(Schedule(entries=[e0]), apps, 0.0, state=state)
+    assert res.completions[0] == pytest.approx(0.06)  # swap + lat
+    r1 = Request(rid=1, app="a", arrival_s=0.0, deadline_s=1.0, true_label=0)
+    e1 = ScheduleEntry(request=r1, model="a-m0", order=2, worker=0)
+    res2 = evaluate(Schedule(entries=[e1]), apps, 0.05, state=state)
+    # starts at the carried 0.06 backlog, resident -> no swap
+    assert res2.completions[0] == pytest.approx(0.07)
+
+
+def test_timeline_oversize_model_resides_alone():
+    """Shared eviction rule: a single model larger than capacity evicts
+    everything else but is itself never evicted (no thrashing)."""
+    big = ModelProfile("big", recalls=np.array([0.9, 0.9]), latency_s=0.01,
+                       load_latency_s=0.05, memory_bytes=5000)
+    small = ModelProfile("small", recalls=np.array([0.7, 0.7]), latency_s=0.01,
+                         load_latency_s=0.02, memory_bytes=400)
+    tl = WorkerTimeline(now=0.0, memory_capacity_bytes=1000)
+    tl.run_batch(small, 1)
+    s, c = tl.run_batch(big, 1)  # evicts small, resides alone over budget
+    assert c - s == pytest.approx(0.06)
+    assert tl._resident == ["big"]
+    s, c = tl.run_batch(big, 1)  # still resident: NOT re-charged
+    assert c - s == pytest.approx(0.01)

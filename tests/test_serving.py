@@ -18,6 +18,16 @@ def test_window_queue_drains_by_arrival():
     assert len(q) == 1
 
 
+def test_window_queue_drain_order_deterministic_on_ties():
+    """Simultaneous arrivals drain by rid regardless of submission order."""
+    q = WindowQueue(window_s=0.1)
+    for rid in (3, 1, 2):
+        q.submit(Request(rid=rid, app="a", arrival_s=0.05, deadline_s=1.0))
+    q.submit(Request(rid=0, app="a", arrival_s=0.01, deadline_s=1.0))
+    assert [r.rid for r in q.drain_window(0.1)] == [0, 1, 2, 3]
+    assert len(q) == 0
+
+
 def test_swap_manager_lru_eviction():
     sm = SwapManager(capacity_bytes=100, sizes={"a": 60, "b": 60, "c": 30},
                      load_latency={"a": 1.0, "b": 2.0, "c": 3.0})
@@ -27,6 +37,34 @@ def test_swap_manager_lru_eviction():
     assert sm.load("c") == 3.0  # fits alongside b
     assert sm.load("b") == 0.0  # still resident
     assert sm.evictions == 1 and sm.swap_count == 3
+
+
+def test_swap_manager_and_timeline_share_oversize_rule():
+    """Regression (shared eviction rule): a model larger than capacity
+    evicts the rest but resides alone — in BOTH the runtime SwapManager
+    and the scheduler WorkerTimeline, with identical eviction counts."""
+    from repro.core.evaluation import WorkerTimeline
+
+    sizes = {"small": 400, "huge": 5000}
+    sm = SwapManager(capacity_bytes=1000, sizes=sizes,
+                     load_latency={"small": 0.02, "huge": 0.05})
+    assert sm.load("small") == 0.02
+    assert sm.load("huge") == 0.05
+    assert list(sm._resident) == ["huge"]  # over budget, but resident
+    assert sm.evictions == 1
+    assert sm.load("huge") == 0.0  # no thrashing: not re-evicted
+
+    tl = WorkerTimeline(now=0.0, memory_capacity_bytes=1000)
+    tl.register_sizes(sizes)
+    small = ModelProfile("small", recalls=np.array([0.7, 0.7]),
+                         latency_s=0.01, load_latency_s=0.02)
+    huge = ModelProfile("huge", recalls=np.array([0.9, 0.9]),
+                        latency_s=0.01, load_latency_s=0.05)
+    tl.run_batch(small, 1)
+    tl.run_batch(huge, 1)
+    assert tl._resident == ["huge"]  # same residency as the SwapManager
+    s, c = tl.run_batch(huge, 1)
+    assert c - s == pytest.approx(0.01)  # resident: swap not re-charged
 
 
 def test_executor_runs_reduced_models_and_counts_swaps():
@@ -43,6 +81,40 @@ def test_executor_runs_reduced_models_and_counts_swaps():
     assert ex.swaps.swap_count == 1  # resident
     ex.run_batch("big", prompts, [4, 5])
     assert ex.swaps.swap_count == 2
+
+
+def test_executor_short_circuit_entries_skip_models():
+    """§V-C1 short-circuit entries produce zero-latency reports, trigger no
+    swap, and never touch prompts; surrounding real batches still run."""
+    from repro.core import Schedule, ScheduleEntry
+
+    variants = {"small": (ARCHS["mamba2-130m"].reduced(), 0)}
+    ex = LMExecutor(variants, new_tokens=2)
+    reqs = [Request(rid=i, app="a", arrival_s=0.0, deadline_s=1.0, true_label=0)
+            for i in range(4)]
+    entries = [
+        ScheduleEntry(request=reqs[0], model="sp:short_circuit", order=1, batch_id=0),
+        ScheduleEntry(request=reqs[1], model="sp:short_circuit", order=2, batch_id=0),
+        ScheduleEntry(request=reqs[2], model="small", order=3, batch_id=1),
+        ScheduleEntry(request=reqs[3], model="small", order=4, batch_id=1),
+    ]
+    calls = []
+
+    def prompt_fn(r):
+        calls.append(r.rid)  # must only see the real batch
+        return np.ones(8, np.int32)
+
+    reports = ex.execute_schedule(Schedule(entries=entries), prompt_fn)
+    assert len(reports) == 2
+    sc, real = reports
+    assert sc.model == "sp:short_circuit"
+    assert sc.total_s == 0.0 and sc.swap_s == 0.0
+    assert sc.batch_size == 2 and sc.tokens.shape == (2, 0)
+    assert sc.predictions == [None, None]
+    assert ex.swaps.swap_count == 1  # only the real batch swapped
+    assert not ex.swaps.is_resident("sp:short_circuit")
+    assert sorted(calls) == [2, 3]
+    assert real.batch_size == 2 and real.tokens.shape[1] == 2
 
 
 def test_edge_server_end_to_end_grouped_beats_lo():
@@ -86,6 +158,22 @@ def test_edge_server_executes_schedules_on_models():
     reports = [rep for o in outs for rep in (o["reports"] or [])]
     assert sum(r.batch_size for r in reports) == 4
     assert all(r.tokens.shape[1] == 2 for r in reports)
+
+
+def test_edge_server_multiworker_placement():
+    """EdgeServer(workers=...) routes scheduling through Eq. 15 placement:
+    entries land on multiple workers and the streaming state tracks each."""
+    from repro.core import Worker
+
+    apps, _ = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=2)
+    srv = EdgeServer(apps, make_policy("Grouped"),
+                     workers=[Worker(0), Worker(1, speed=2.0)])
+    outs, stats = srv.run(reqs)
+    assert stats.requests == 12
+    used = {e.worker for o in outs for e in o["schedule"].entries}
+    assert used == {0, 1}  # Eq. 15 placement used both workers
+    assert set(srv.state.timelines) == {0, 1}
 
 
 def test_lm_profiles_fallback_latency_model():
