@@ -21,18 +21,14 @@ from repro.core import (
     ConfusionSneakPeek,
     ModelProfile,
     Application,
-    Request,
     Worker,
     attach_sneakpeek,
     evaluate,
     expected_accuracy,
-    make_policy,
     multiworker_schedule,
-    schedule_window,
 )
 from repro.data.applications import (
     APP_SPECS,
-    build_benchmark_suite,
     make_application,
     make_requests,
     make_sneakpeek,

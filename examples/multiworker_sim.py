@@ -4,8 +4,6 @@ streaming multi-window run with per-worker state carry-over.
 
     PYTHONPATH=src python examples/multiworker_sim.py
 """
-import numpy as np
-
 from repro.core import (
     Request,
     Simulation,

@@ -7,11 +7,7 @@ short-circuit inference).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.core import (
-    Application,
-    ModelProfile,
     Request,
     evaluate,
     make_policy,

@@ -9,8 +9,6 @@ Layer i has type pattern[i % len(pattern)]; full periods are scanned
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Sequence
 
 __all__ = ["ModelConfig"]
 

@@ -25,6 +25,12 @@ from repro.core.fastpath import (
 )
 from repro.core.grouping import grouped_schedule, group_by_app, split_groups_by_label
 from repro.core.multiworker import Worker, multiworker_schedule
+from repro.core.pipeline import (
+    WindowPipeline,
+    get_pipeline_backend,
+    pipeline_schedule,
+    set_pipeline_backend,
+)
 from repro.core.priority import group_priority, request_priorities, request_priority
 from repro.core.scheduler import (
     POLICY_NAMES,
@@ -41,6 +47,7 @@ from repro.core.sneakpeek import (
     KNNSneakPeek,
     SneakPeekModel,
     attach_sneakpeek,
+    ingest_window,
 )
 from repro.core.types import Application, Request, Schedule, ScheduleEntry
 from repro.core.utility import PENALTIES, utility
@@ -55,12 +62,14 @@ __all__ = [
     "fast_per_request_schedule", "precompute_windows", "set_utility_backend",
     "grouped_schedule", "group_by_app", "split_groups_by_label",
     "Worker", "multiworker_schedule",
+    "WindowPipeline", "get_pipeline_backend", "pipeline_schedule",
+    "set_pipeline_backend",
     "group_priority", "request_priorities", "request_priority",
     "POLICY_NAMES", "SchedulerPolicy", "effective_apps", "make_policy",
     "schedule_window",
     "Simulation", "WindowResult", "run_window", "StreamingState",
     "ConfusionSneakPeek", "DecisionRuleSneakPeek", "KNNSneakPeek",
-    "SneakPeekModel", "attach_sneakpeek",
+    "SneakPeekModel", "attach_sneakpeek", "ingest_window",
     "Application", "Request", "Schedule", "ScheduleEntry",
     "PENALTIES", "utility",
 ]

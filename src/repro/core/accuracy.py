@@ -18,8 +18,6 @@ paper's scheduler also runs on CPU); the heavy data path lives in JAX.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
-
 import numpy as np
 
 __all__ = [

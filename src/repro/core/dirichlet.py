@@ -32,6 +32,7 @@ __all__ = [
     "strongly_informative_prior",
     "posterior",
     "posterior_mean",
+    "posterior_mean_batch",
     "posterior_variance",
 ]
 
@@ -101,6 +102,27 @@ def posterior_mean(prior: DirichletPrior, evidence: np.ndarray) -> np.ndarray:
     """E[theta | y]: the SneakPeek probability vector (Def. 4.1.2)."""
     post = posterior(prior, evidence)
     return post.mean
+
+
+def posterior_mean_batch(prior: DirichletPrior, evidence: np.ndarray) -> np.ndarray:
+    """Eq. 11 posterior means for a whole window of evidence rows.
+
+    ``evidence`` is an (R, C) matrix of multinomial counts, one row per
+    request; returns the (R, C) matrix of posterior means, row-identical
+    to ``posterior_mean(prior, evidence[i])`` (same per-row arithmetic, so
+    the batched ingest stage and the scalar path produce the same thetas).
+    """
+    y = np.asarray(evidence, dtype=np.float64)
+    if y.ndim != 2:
+        raise ValueError(f"evidence must be (R, C), got shape {y.shape}")
+    if y.shape[1] != prior.alpha.shape[0]:
+        raise ValueError(
+            f"evidence has {y.shape[1]} classes, prior has {prior.alpha.shape[0]}"
+        )
+    if np.any(y < 0):
+        raise ValueError("evidence counts must be non-negative")
+    a = prior.alpha[None, :] + y
+    return a / a.sum(axis=1, keepdims=True)
 
 
 def posterior_variance(prior: DirichletPrior, evidence: np.ndarray) -> np.ndarray:

@@ -44,6 +44,7 @@ __all__ = [
     "set_utility_backend",
     "get_utility_backend",
     "utility_matrix",
+    "ordered_group_items",
     "fast_per_request_schedule",
     "fast_grouped_schedule",
     "fast_multiworker_schedule",
@@ -480,6 +481,26 @@ def fast_per_request_schedule(
 # --------------------------------------------------------------------------
 
 
+def ordered_group_items(
+    groups: Mapping[str, list],
+    gp: Mapping[str, float],
+    split_by_label: bool,
+) -> list[tuple[str, list]]:
+    """Group execution order: Eq. 14 priority descending, key tie-break;
+    with label splitting, same-application subgroups stay ADJACENT (apps
+    ordered by their best subgroup's priority) so splitting doesn't re-pay
+    the model swap — the shared rule of the fast and pipeline schedulers."""
+    ordered_groups = sorted(groups.items(), key=lambda item: (-gp[item[0]], item[0]))
+    if split_by_label and len(ordered_groups) > 1:
+        app_rank: dict[str, int] = {}
+        for key, members in ordered_groups:
+            app_rank.setdefault(members[0].app, len(app_rank))
+        ordered_groups.sort(
+            key=lambda item: (app_rank[item[1][0].app], -gp[item[0]])
+        )
+    return ordered_groups
+
+
 def fast_grouped_schedule(
     requests: Sequence[Request],
     apps: Mapping[str, Application],
@@ -535,17 +556,7 @@ def fast_grouped_schedule(
     prio = wa.priorities(data_aware)
     member_idx = {key: wa.rows_of(members) for key, members in groups.items()}
     gp = {key: float(np.mean(prio[member_idx[key]])) for key in groups}  # Eq. 14
-
-    ordered_groups = sorted(groups.items(), key=lambda item: (-gp[item[0]], item[0]))
-    # Beyond-paper refinement (see grouping.py): keep same-application
-    # subgroups adjacent so label splitting doesn't re-pay the model swap.
-    if split_by_label and len(ordered_groups) > 1:
-        app_rank: dict[str, int] = {}
-        for key, members in ordered_groups:
-            app_rank.setdefault(members[0].app, len(app_rank))
-        ordered_groups.sort(
-            key=lambda item: (app_rank[item[1][0].app], -gp[item[0]])
-        )
+    ordered_groups = ordered_group_items(groups, gp, split_by_label)
 
     entries: list[ScheduleEntry] = []
     order = 1

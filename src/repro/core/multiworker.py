@@ -12,8 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
-import numpy as np
-
 from repro.core.accuracy import ModelProfile
 from repro.core.evaluation import WorkerTimeline, estimate_accuracy
 from repro.core.grouping import group_by_app, split_groups_by_label

@@ -1,0 +1,587 @@
+"""Device-resident window pipeline: ingest -> posterior -> Eq. 9/12 -> Eq. 2/13.
+
+The fast path (repro.core.fastpath) vectorized the paper's equations but
+still splits one scheduling window across the host/device boundary: the
+SneakPeek stage runs per request in Python, the Eq. 9/12 matrices run as
+numpy (or one stacked device program), and the Eq. 2/13 *selection* —
+the argmax that actually picks a model — stays a host loop.  This module
+fuses the whole window data plane into compiled programs:
+
+  * **Ingest** — ``sneakpeek.ingest_window``: one batched evidence
+    compute per application (k-NN votes through the Pallas kernel when
+    the SneakPeek model uses the jax backend) followed by one batched
+    Dirichlet update (``dirichlet.posterior_mean_batch``, Eq. 11).
+  * **Per-request policies** (MaxAcc / LO-EDF / LO-Priority) — ONE
+    jitted program per window: Eq. 9 sharpened accuracies, Eq. 12
+    priorities, the window ordering (``lexsort``), and the Eq. 2/13
+    selection.  MaxAcc selects with a whole-window argmax tile; the
+    locally-optimal policies run a ``lax.scan`` that threads the
+    queue-tail time and single-slot model residency through the
+    sequential selection (the loop the ROADMAP called out as
+    host-bound), scoring all candidate models of each step at once.
+  * **Grouped policies** (Grouped / SneakPeek) — the stacked Eq. 9/12
+    program (``fastpath.precompute_windows`` with the jax backend) plus
+    a jitted ``lax.scan`` over the ordered groups, each step one greedy
+    (members x models) Eq. 13 utility tile reduced to a masked mean and
+    an argmax.  The brute-force branch (<= tau groups) delegates to the
+    exact host solver, exactly as the fast path does.
+
+Programs run under ``jax.experimental.enable_x64`` so decisions match
+the float64 numpy fast path and the scalar reference (the parity suite
+in tests/test_pipeline.py asserts identical schedules for all five
+policies).  Compiled programs are cached by their static configuration
+(policy knobs + per-app shape signature), so streaming runs with steady
+window shapes reuse them across windows.
+
+Escape hatches mirror the fast path's: ``make_policy(name,
+pipeline=True)`` turns the pipeline on per policy (default off),
+``set_pipeline_backend("numpy")`` routes every pipeline schedule through
+the numpy fast path (decision-identical, no JAX needed), and the scalar
+reference remains ``make_policy(name, fastpath=False)``.  Carried
+streaming state is supported for the paper's conservative single-slot
+residency; capacity-based (multi-model) residency falls back to the
+numpy fast path, whose timelines implement the full LRU semantics.
+"""
+from __future__ import annotations
+
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.fastpath import (
+    WindowArrays,
+    fast_grouped_schedule,
+    fast_per_request_schedule,
+    ordered_group_items,
+    precompute_windows,
+)
+from repro.core.sneakpeek import ingest_window
+from repro.core.types import Application, Request, Schedule, ScheduleEntry
+
+__all__ = [
+    "WindowPipeline",
+    "pipeline_schedule",
+    "set_pipeline_backend",
+    "get_pipeline_backend",
+]
+
+_PIPELINE_BACKEND = "auto"
+_PENALTY_ID = {"step": 0, "linear": 1, "sigmoid": 2, "none": 3}
+# Compiled window programs keyed by static configuration; jit's own cache
+# then keys on array shapes, so steady streaming windows recompile once.
+_PROGRAMS: dict = {}
+# Per-app-set static tables (swap/latency/residency-id/penalty, tie-pref
+# order), window-independent: built once and reused across windows.  The
+# cache holds the AppArrays refs it was built from, so the id key stays
+# sound (AppArrays itself is memoized per Application); bounded LRU so
+# retired application sets don't pin their arrays forever.
+_TABLES: dict = {}
+_TABLES_MAX = 16
+
+
+def set_pipeline_backend(name: str) -> None:
+    """Select the pipeline backend: "auto" (jax when available), "jax",
+    or "numpy" (delegate to the decision-identical numpy fast path)."""
+    global _PIPELINE_BACKEND
+    if name not in ("auto", "jax", "numpy"):
+        raise ValueError(f"unknown pipeline backend {name!r}")
+    _PIPELINE_BACKEND = name
+
+
+def get_pipeline_backend() -> str:
+    return _PIPELINE_BACKEND
+
+
+def _have_jax() -> bool:
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return False
+    return True
+
+
+# --------------------------------------------------------------------------
+# Jitted program builders
+# --------------------------------------------------------------------------
+
+
+def _penalty_jnp(pen_id, d, e):
+    """Eq. 2 penalty gamma(d, e) selected by per-app id, branchless.
+
+    Mirrors repro.core.utility's ndarray forms (step / linear / sigmoid /
+    none) with nested selects; out-of-branch NaN/inf lanes are discarded
+    by the outer ``where``s exactly like the numpy errstate guards.
+    """
+    import jax.numpy as jnp
+
+    step = jnp.where(d < e, 1.0, 0.0)
+    x = (e - d) / d
+    linear = jnp.where(e <= d, 0.0, jnp.where(d <= 0, 1.0, jnp.minimum(1.0, x)))
+    ratio = x / (1.0 - x)
+    inner = jnp.minimum(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+    sigmoid = jnp.where(
+        e <= d,
+        0.0,
+        jnp.where(
+            d <= 0,
+            1.0,
+            jnp.where(x >= 1.0, 1.0, jnp.where(x <= 0.0, 0.0, inner)),
+        ),
+    )
+    return jnp.where(
+        pen_id == 0, step, jnp.where(pen_id == 1, linear, jnp.where(pen_id == 2, sigmoid, 0.0))
+    )
+
+
+def _per_request_program(key, ordering, selection, data_aware, app_static):
+    """One fused jitted program: Eq. 9/12 -> ordering -> Eq. 2/13 scan.
+
+    ``app_static`` is a tuple of (num_models, has_theta) per application —
+    the static branch structure; everything else is traced.
+    """
+    prog = _PROGRAMS.get(key)
+    if prog is not None:
+        return prog
+    import jax
+    import jax.numpy as jnp
+
+    def program(t0, res0, deadlines, arrivals, rids, app_id,
+                swap_tab, lat1_tab, gid_tab, valid_tab, pen_tab, per_app):
+        n_total = deadlines.shape[0]
+        m_max = swap_tab.shape[1]
+        prio = jnp.zeros(n_total, dtype=jnp.float64)
+        acc = jnp.zeros((n_total, m_max), dtype=jnp.float64)
+        for (m_a, has_theta), (theta, trows, idx, d_rel, recalls, prof, sc, pref) in zip(
+            app_static, per_app
+        ):
+            n_a = idx.shape[0]
+            a_mat = jnp.tile(prof, (n_a, 1))
+            if data_aware and has_theta:
+                sharpened = theta @ recalls.T  # Eq. 9, batched
+                sharpened = jnp.where(sc[None, :], prof[None, :], sharpened)
+                a_mat = a_mat.at[trows].set(sharpened)
+            var = a_mat.var(axis=1) if m_a > 1 else jnp.zeros(n_a)
+            prio = prio.at[idx].set((1.0 + var) * jnp.exp(-jnp.maximum(d_rel, -60.0)))
+            cols = jnp.arange(m_a)
+            acc = acc.at[idx[:, None], cols[None, :]].set(a_mat[:, pref])
+
+        if ordering == "fcfs":
+            order = jnp.lexsort((rids, arrivals))
+        elif ordering == "edf":
+            order = jnp.lexsort((rids, deadlines))
+        else:  # priority (Eq. 12)
+            order = jnp.lexsort((rids, -prio))
+
+        if selection == "max_accuracy":
+            # Deadline-oblivious whole-window argmax tile; columns are in
+            # tie-preference order so first-max == the scalar tie-break.
+            sel_all = jnp.argmax(
+                jnp.where(valid_tab[app_id], acc, -jnp.inf), axis=1
+            )
+
+        def step(carry, g):
+            t, res = carry
+            aid = app_id[g]
+            gid_row = gid_tab[aid]
+            swap_row = jnp.where(gid_row == res, 0.0, swap_tab[aid])
+            lat_row = lat1_tab[aid]
+            if selection == "locally_optimal":
+                # Eq. 13 at the queue tail: every candidate scored at once.
+                completion = t + swap_row + lat_row
+                gam = _penalty_jnp(pen_tab[aid], deadlines[g], completion)
+                u = acc[g] * (1.0 - jnp.clip(gam, 0.0, 1.0))
+                j = jnp.argmax(jnp.where(valid_tab[aid], u, -jnp.inf))
+            else:
+                j = sel_all[g]
+            dt = swap_row[j] + lat_row[j]
+            return (t + dt, gid_row[j]), (j, t, dt)
+
+        _, (sel, starts, lats) = jax.lax.scan(step, (t0, res0), order, unroll=8)
+        return order, sel, starts, lats
+
+    prog = jax.jit(program)
+    _PROGRAMS[key] = prog
+    return prog
+
+
+def _grouped_program():
+    """Jitted scan over ordered groups: one greedy Eq. 13 tile per step."""
+    prog = _PROGRAMS.get("grouped")
+    if prog is not None:
+        return prog
+    import jax
+    import jax.numpy as jnp
+
+    def program(t0, res0, acc, member_mask, deadlines, sizes,
+                lat_fixed, lat_item, swap_tab, gid_tab, valid_tab, pen_tab):
+        def step(carry, g):
+            t, res = carry
+            swap_row = jnp.where(gid_tab[g] == res, 0.0, swap_tab[g])
+            completion = t + swap_row + lat_fixed[g] + lat_item[g] * sizes[g]
+            gam = _penalty_jnp(pen_tab[g], deadlines[g][:, None], completion[None, :])
+            tile = acc[g] * (1.0 - jnp.clip(gam, 0.0, 1.0))  # (B_max, M_max)
+            u_mean = (tile * member_mask[g][:, None]).sum(axis=0) / sizes[g]
+            j = jnp.argmax(jnp.where(valid_tab[g], u_mean, -jnp.inf))
+            dt = swap_row[j] + lat_fixed[g][j] + lat_item[g][j] * sizes[g]
+            return (t + dt, gid_tab[g][j]), (j, t, dt)
+
+        n_groups = acc.shape[0]
+        _, (sel, starts, lats) = jax.lax.scan(
+            step, (t0, res0), jnp.arange(n_groups), unroll=4
+        )
+        return sel, starts, lats
+
+    prog = jax.jit(program)
+    _PROGRAMS["grouped"] = prog
+    return prog
+
+
+# --------------------------------------------------------------------------
+# WindowPipeline
+# --------------------------------------------------------------------------
+
+
+class WindowPipeline:
+    """Fused window data plane for one (apps, policy) configuration.
+
+    ``run`` executes the full pipeline (ingest + schedule); ``schedule``
+    assumes evidence/theta are already attached (streaming callers run
+    the stochastic ingest exactly once per request).  Instances are cheap
+    — compiled programs live in a module-level cache — so holding one
+    per ``Simulation``/``EdgeServer`` reuses compilations across windows.
+    """
+
+    def __init__(
+        self,
+        apps: Mapping[str, Application],
+        sneakpeeks=None,
+        policy=None,
+        backend: str | None = None,
+    ):
+        self.apps = apps
+        self.sneakpeeks = sneakpeeks or {}
+        self.policy = policy
+        if backend is not None and backend not in ("auto", "jax", "numpy"):
+            raise ValueError(f"unknown pipeline backend {backend!r}")
+        self.backend = backend
+
+    def resolved_backend(self) -> str:
+        b = self.backend or _PIPELINE_BACKEND
+        if b == "auto":
+            b = "jax" if _have_jax() else "numpy"
+        return b
+
+    # -- stages ------------------------------------------------------------
+    def ingest(self, requests: Sequence[Request]) -> None:
+        """Batched SneakPeek stage (evidence + Dirichlet posterior)."""
+        if self.sneakpeeks:
+            ingest_window(requests, self.apps, self.sneakpeeks)
+
+    def run(self, requests: Sequence[Request], now: float, policy=None, state=None) -> Schedule:
+        """Full window pass: ingest then schedule."""
+        self.ingest(requests)
+        return self.schedule(requests, now, policy=policy, state=state)
+
+    # -- scheduling --------------------------------------------------------
+    def schedule(
+        self,
+        requests: Sequence[Request],
+        now: float,
+        policy=None,
+        state=None,
+        arrays: WindowArrays | None = None,
+    ) -> Schedule:
+        policy = policy if policy is not None else self.policy
+        if policy is None:
+            raise ValueError("WindowPipeline needs a policy (init arg or call arg)")
+        t0 = time.perf_counter()
+        if not requests:
+            return Schedule()
+        backend = self.resolved_backend()
+        seed = self._residency_seed(state, now)
+        if backend == "numpy" or seed is None:
+            # numpy reference (or residency semantics beyond the compiled
+            # single-slot scan): the decision-identical numpy fast path.
+            sched = self._schedule_numpy(policy, requests, now, state, arrays)
+        elif policy.grouped:
+            sched = self._schedule_grouped_jax(policy, requests, now, seed, state, arrays)
+        else:
+            sched = self._schedule_per_request_jax(policy, requests, now, seed, arrays)
+        sched.scheduling_overhead_s = time.perf_counter() - t0
+        return sched
+
+    def _schedule_numpy(self, policy, requests, now, state, arrays):
+        if policy.grouped:
+            return fast_grouped_schedule(
+                requests, self.apps, now,
+                tau=policy.tau,
+                data_aware=policy.data_aware,
+                split_by_label=policy.split_by_label,
+                arrays=arrays,
+                state=state,
+            )
+        return fast_per_request_schedule(
+            requests, self.apps, now,
+            ordering=policy.ordering,
+            selection=policy.selection,
+            data_aware=policy.data_aware,
+            arrays=arrays,
+            state=state,
+        )
+
+    def _residency_seed(self, state, now: float):
+        """(t0, resident-name) for the compiled single-slot scan, or None
+        when the carried state needs the host timelines (LRU capacity /
+        multi-model residency)."""
+        if state is None:
+            return float(now), None
+        if state.capacity is not None:
+            return None
+        tl = state.timeline(0).clone()
+        tl.advance(now)
+        if len(tl._resident) > 1:
+            return None
+        return float(tl.t), tl.mru
+
+    def _global_ids(self, wa: WindowArrays) -> dict[str, int]:
+        """Residency ids by model NAME (the timelines' residency key)."""
+        gids: dict[str, int] = {}
+        for app_name in wa.req_idx:
+            for name in wa.app_arrays[app_name].names:
+                gids.setdefault(name, len(gids))
+        return gids
+
+    def _window_tables(self, wa: WindowArrays):
+        """Window-independent per-app model tables (tie-pref order),
+        cached across windows with the same application set."""
+        app_names = list(wa.req_idx)
+        aas = [wa.app_arrays[n] for n in app_names]
+        key = tuple(id(a) for a in aas)
+        ent = _TABLES.get(key)
+        if ent is not None:
+            _TABLES[key] = _TABLES.pop(key)  # LRU touch
+            return ent
+        gids = self._global_ids(wa)
+        n_apps = len(app_names)
+        m_max = max(len(a.names) for a in aas)
+        swap_tab = np.zeros((n_apps, m_max))
+        lat1_tab = np.zeros((n_apps, m_max))
+        gid_tab = np.full((n_apps, m_max), -2, dtype=np.int64)  # -2: never resident
+        valid_tab = np.zeros((n_apps, m_max), dtype=bool)
+        pen_tab = np.zeros(n_apps, dtype=np.int64)
+        pref_tab = np.zeros((n_apps, m_max), dtype=np.int64)
+        for ai, aa in enumerate(aas):
+            pref = aa.tie_pref
+            m = len(aa.names)
+            swap_tab[ai, :m] = aa.swap[pref]
+            lat1_tab[ai, :m] = aa.lat1[pref]
+            gid_tab[ai, :m] = [gids[aa.names[int(i)]] for i in pref]
+            valid_tab[ai, :m] = True
+            pen_tab[ai] = _PENALTY_ID[aa.app.penalty]
+            pref_tab[ai, :m] = pref
+        ent = {
+            "pin": aas,  # strong refs keep the id key sound
+            "app_names": app_names,
+            "gids": gids,
+            "swap": swap_tab,
+            "lat1": lat1_tab,
+            "gid": gid_tab,
+            "valid": valid_tab,
+            "pen": pen_tab,
+            "pref": pref_tab,
+        }
+        _TABLES[key] = ent
+        while len(_TABLES) > _TABLES_MAX:
+            _TABLES.pop(next(iter(_TABLES)))
+        return ent
+
+    def _enable_x64(self):
+        from jax.experimental import enable_x64
+
+        return enable_x64()
+
+    def _schedule_per_request_jax(self, policy, requests, now, seed, arrays):
+        if policy.selection not in ("locally_optimal", "max_accuracy"):
+            raise ValueError(f"unknown selection {policy.selection!r}")
+        if policy.ordering not in ("fcfs", "edf", "priority"):
+            raise ValueError(f"unknown ordering {policy.ordering!r}")
+        wa = arrays if arrays is not None else WindowArrays(requests, self.apps, now)
+        tab = self._window_tables(wa)
+        app_names = tab["app_names"]
+        gids = tab["gids"]
+        n_total = len(wa.requests)
+
+        app_id = np.zeros(n_total, dtype=np.int64)
+        per_app, app_static = [], []
+        for ai, name in enumerate(app_names):
+            aa = wa.app_arrays[name]
+            idx = wa.req_idx[name]
+            app_id[idx] = ai
+            trows = wa._theta_rows[name]
+            app_static.append((len(aa.names), bool(trows.size)))
+            per_app.append((
+                wa._theta_mat[name], trows, idx, wa.deadlines[idx] - float(now),
+                aa.R, aa.profiled, aa.sc, aa.tie_pref,
+            ))
+
+        key = (
+            "per_request", policy.ordering, policy.selection,
+            bool(policy.data_aware), tuple(app_static),
+        )
+        prog = _per_request_program(
+            key, policy.ordering, policy.selection, bool(policy.data_aware),
+            tuple(app_static),
+        )
+        t0, resident = seed
+        res0 = np.int64(gids.get(resident, -1))
+        with self._enable_x64():
+            order, sel, starts, lats = prog(
+                np.float64(t0), res0, wa.deadlines, wa.arrivals,
+                np.asarray(wa.rids, dtype=np.int64), app_id,
+                tab["swap"], tab["lat1"], tab["gid"], tab["valid"], tab["pen"],
+                per_app,
+            )
+        order = np.asarray(order)
+        local = tab["pref"][app_id[order], np.asarray(sel)]
+        starts = np.asarray(starts)
+        lats = np.asarray(lats)
+
+        entries = []
+        for k in range(n_total):
+            g = int(order[k])
+            aa = wa.app_arrays[wa.app_of[g]]
+            entries.append(
+                ScheduleEntry(
+                    request=wa.requests[g],
+                    model=aa.names[int(local[k])],
+                    order=k + 1,
+                    batch_id=-1,
+                    est_start_s=float(starts[k]),
+                    est_latency_s=float(lats[k]),
+                )
+            )
+        sched = Schedule(entries=entries)
+        sched.validate()
+        return sched
+
+    def _schedule_grouped_jax(self, policy, requests, now, seed, state, arrays):
+        from repro.core.bruteforce import brute_force_groups
+        from repro.core.evaluation import WorkerTimeline
+        from repro.core.grouping import group_by_app, split_groups_by_label
+
+        acc_mode = "sharpened" if policy.data_aware else "profiled"
+        groups = group_by_app(requests)
+        if policy.split_by_label:
+            groups = split_groups_by_label(groups, self.apps)
+
+        if arrays is not None:
+            wa = arrays
+        else:
+            # Stacked Eq. 9/12 device program (float64 for decision parity).
+            with self._enable_x64():
+                (wa,) = precompute_windows(
+                    [(list(requests), now)], self.apps,
+                    data_aware=policy.data_aware, backend="jax",
+                )
+
+        if len(groups) <= policy.tau:
+            if state is not None:
+                tl = state.timeline(0).clone()
+                tl.advance(now)
+            else:
+                tl = WorkerTimeline(now)
+            try:
+                return brute_force_groups(
+                    groups, self.apps, now, acc_mode=acc_mode, arrays=wa, timeline=tl
+                )
+            except ValueError:
+                pass  # too many candidates; fall through to the greedy scan
+
+        prio = wa.priorities(policy.data_aware)
+        member_idx = {key: wa.rows_of(members) for key, members in groups.items()}
+        gp = {key: float(np.mean(prio[member_idx[key]])) for key in groups}  # Eq. 14
+        ordered_groups = ordered_group_items(groups, gp, policy.split_by_label)
+
+        gids = self._global_ids(wa)
+        n_groups = len(ordered_groups)
+        b_max = max(len(members) for _, members in ordered_groups)
+        m_max = max(len(wa.app_arrays[n].names) for n in wa.req_idx)
+        acc = np.zeros((n_groups, b_max, m_max))
+        member_mask = np.zeros((n_groups, b_max))
+        deadlines = np.ones((n_groups, b_max))
+        sizes = np.zeros(n_groups)
+        lat_fixed = np.zeros((n_groups, m_max))
+        lat_item = np.zeros((n_groups, m_max))
+        swap_tab = np.zeros((n_groups, m_max))
+        gid_tab = np.full((n_groups, m_max), -2, dtype=np.int64)
+        valid_tab = np.zeros((n_groups, m_max), dtype=bool)
+        pen_tab = np.zeros(n_groups, dtype=np.int64)
+        prefs = []
+        for gi, (key, members) in enumerate(ordered_groups):
+            aa = wa.app_arrays[members[0].app]
+            pref = aa.tie_pref
+            prefs.append(pref)
+            idx = member_idx[key]
+            b, m = len(members), len(aa.names)
+            a_rows = wa.acc_matrix(members[0].app, acc_mode)[wa.row_of[idx]]
+            acc[gi, :b, :m] = a_rows[:, pref]
+            member_mask[gi, :b] = 1.0
+            deadlines[gi, :b] = wa.deadlines[idx]
+            sizes[gi] = float(b)
+            lat_fixed[gi, :m] = aa.lat_fixed[pref]
+            lat_item[gi, :m] = aa.lat_item[pref]
+            swap_tab[gi, :m] = aa.swap[pref]
+            gid_tab[gi, :m] = [gids[aa.names[int(i)]] for i in pref]
+            valid_tab[gi, :m] = True
+            pen_tab[gi] = _PENALTY_ID[aa.app.penalty]
+
+        t0, resident = seed
+        res0 = np.int64(gids.get(resident, -1))
+        prog = _grouped_program()
+        with self._enable_x64():
+            sel, starts, lats = prog(
+                np.float64(t0), res0, acc, member_mask, deadlines, sizes,
+                lat_fixed, lat_item, swap_tab, gid_tab, valid_tab, pen_tab,
+            )
+        sel = np.asarray(sel)
+        starts = np.asarray(starts)
+        lats = np.asarray(lats)
+
+        entries = []
+        order = 1
+        for gi, (key, members) in enumerate(ordered_groups):
+            aa = wa.app_arrays[members[0].app]
+            idx = member_idx[key]
+            model = aa.names[int(prefs[gi][int(sel[gi])])]
+            member_order = np.lexsort((wa.rids[idx], -prio[idx]))
+            for j in member_order:
+                entries.append(
+                    ScheduleEntry(
+                        request=wa.requests[int(idx[int(j)])],
+                        model=model,
+                        order=order,
+                        batch_id=gi,
+                        est_start_s=float(starts[gi]),
+                        est_latency_s=float(lats[gi]),
+                    )
+                )
+                order += 1
+        sched = Schedule(entries=entries)
+        sched.validate()
+        return sched
+
+
+def pipeline_schedule(
+    policy,
+    requests: Sequence[Request],
+    apps: Mapping[str, Application],
+    now: float,
+    state=None,
+    arrays: WindowArrays | None = None,
+    backend: str | None = None,
+) -> Schedule:
+    """One pipelined window pass for ``SchedulerPolicy.schedule``."""
+    return WindowPipeline(apps, policy=policy, backend=backend).schedule(
+        requests, now, state=state, arrays=arrays
+    )

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Mapping, Sequence
+from typing import Mapping, Sequence
 
 from repro.core.evaluation import WorkerTimeline
 from repro.core.grouping import grouped_schedule
@@ -47,6 +47,11 @@ class SchedulerPolicy:
     # original scalar loops — kept as the parity/benchmark reference
     # (``make_policy(name, fastpath=False)``).
     fastpath: bool = True
+    # Device-resident window pipeline (repro.core.pipeline): Eq. 9/12 and
+    # the Eq. 2/13 selection fused into jitted programs
+    # (``make_policy(name, pipeline=True)``).  Off by default; the numpy
+    # fast path and the scalar loops remain the references.
+    pipeline: bool = False
 
     def schedule(
         self,
@@ -61,7 +66,13 @@ class SchedulerPolicy:
         clone, never committed); ``arrays`` is an optional precomputed
         ``fastpath.WindowArrays`` (fast path only)."""
         t0 = time.perf_counter()
-        if self.grouped:
+        if self.pipeline:
+            from repro.core.pipeline import pipeline_schedule
+
+            sched = pipeline_schedule(
+                self, requests, apps, now, state=state, arrays=arrays
+            )
+        elif self.grouped:
             sched = grouped_schedule(
                 requests,
                 apps,

@@ -14,7 +14,7 @@ same (utility, -latency, name) tie-breaking as the scalar loop.  Without
 """
 from __future__ import annotations
 
-from typing import Mapping, Sequence
+from typing import Sequence
 
 import numpy as np
 

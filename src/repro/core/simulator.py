@@ -81,6 +81,11 @@ class Simulation:
         before the sequential scheduling pass; ``prebatch_backend`` picks
         "numpy" (default, bit-compatible) or "jax" (jitted,
         device-resident, float32 on default configs).
+      pipeline: feed every window through a ``pipeline.WindowPipeline``
+        (fused jitted Eq. 9/12 + Eq. 2/13 selection).  The pipeline
+        object persists across windows so streaming runs reuse the
+        compiled programs; single-worker scheduling only (a ``workers``
+        pool keeps the Eq. 15 placement path).
     """
 
     def __init__(
@@ -96,6 +101,7 @@ class Simulation:
         memory_capacity_bytes: int | None = None,
         prebatch: int = 0,
         prebatch_backend: str = "numpy",
+        pipeline: bool = False,
     ):
         self.policy = policy
         self.apps = dict(apps)
@@ -118,6 +124,11 @@ class Simulation:
         # deterministic, so it must not be rebuilt per window (fresh
         # Application objects would also defeat AppArrays memoization).
         self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
+        self._pipeline = None
+        if pipeline and not self.workers:
+            from repro.core.pipeline import WindowPipeline
+
+            self._pipeline = WindowPipeline(self._eff_apps, policy=policy)
         self.log: list[dict] = []
 
     @property
@@ -170,15 +181,21 @@ class Simulation:
             for (w, batch), arrays in zip(group, arrays_list):
                 window_close = (w + 1) * self.window_s
                 carried = self.state.backlog_s(window_close)
-                sched, eff_apps = schedule_window(
-                    self.policy,
-                    batch,
-                    self._eff_apps,
-                    window_close,
-                    workers=self.workers,
-                    state=self.state,
-                    arrays=arrays,
-                )
+                if self._pipeline is not None:
+                    eff_apps = self._eff_apps
+                    sched = self._pipeline.schedule(
+                        batch, window_close, state=self.state, arrays=arrays
+                    )
+                else:
+                    sched, eff_apps = schedule_window(
+                        self.policy,
+                        batch,
+                        self._eff_apps,
+                        window_close,
+                        workers=self.workers,
+                        state=self.state,
+                        arrays=arrays,
+                    )
                 # The state owns the pool: every timeline (idle or not)
                 # counts toward the logged utilization.
                 res = evaluate(

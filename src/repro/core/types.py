@@ -7,7 +7,7 @@ model variants + profiles + an SLO penalty; requests carry a deadline and
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import numpy as np
 

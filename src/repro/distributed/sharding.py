@@ -20,7 +20,6 @@ import threading
 from typing import Any, Mapping, Sequence
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 __all__ = [

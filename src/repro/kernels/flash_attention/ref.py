@@ -5,7 +5,6 @@ dry-run compiles), reshaped to the kernel's GQA-native layout.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.models.attention import flash_attention as _model_flash
 

@@ -3,8 +3,6 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.ssd import ssd_scan
-
 __all__ = ["ssd_ref"]
 
 

@@ -31,12 +31,10 @@ from repro.distributed.sharding import use_sharding
 from repro.launch import shardings as shd
 from repro.launch.hlo_analysis import collective_bytes
 from repro.models import blocks as blocks_mod
-from repro.models import kvcache
 from repro.models.attention import attention_options
 from repro.models.layers import logits_from_embed, rmsnorm
-from repro.models.spec import abstract_params, init_params, logical_axes, stack
-from repro.models.transformer import model_spec, _tail_kinds
-from repro.training.optimizer import adamw_step, init_opt_state
+from repro.models.spec import abstract_params, logical_axes
+from repro.models.transformer import _tail_kinds
 
 __all__ = ["composed_cost"]
 

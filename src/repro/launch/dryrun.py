@@ -33,9 +33,8 @@ from repro.distributed.sharding import use_sharding
 from repro.launch import shardings as shd
 from repro.launch.hlo_analysis import collective_bytes, roofline_terms
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import input_specs, make_decode_step, make_prefill_step, make_train_step
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
 from repro.models import LM
-from repro.models.kvcache import abstract_cache
 from repro.training.optimizer import OptimizerConfig, init_opt_state
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"

@@ -14,7 +14,6 @@ in EXPERIMENTS.md §Roofline):
 from __future__ import annotations
 
 import re
-from typing import Iterable
 
 __all__ = ["collective_bytes", "roofline_terms", "HW"]
 

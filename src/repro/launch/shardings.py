@@ -2,11 +2,10 @@
 from __future__ import annotations
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.distributed.policies import dp_axes
-from repro.distributed.sharding import ShardingPolicy, params_pspecs, spec_for_axes
+from repro.distributed.sharding import ShardingPolicy, params_pspecs
 
 __all__ = [
     "param_pspecs",
@@ -41,7 +40,9 @@ def opt_state_pspecs(model, policy: ShardingPolicy, mesh, opt_cfg):
         scale = PartitionSpec(*(parts[:-1] + [None])) if parts else PartitionSpec()
         return {"q": ps, "scale": scale}
 
-    is_ps = lambda x: isinstance(x, PartitionSpec)
+    def is_ps(x):
+        return isinstance(x, PartitionSpec)
+
     return {
         "step": PartitionSpec(),
         "master": p if needs_master else None,

@@ -51,7 +51,6 @@ def main(argv=None):
     shardings = None
     if args.mesh:
         from repro.distributed.policies import make_policy
-        from repro.distributed.sharding import use_sharding
         from repro.launch import shardings as shd
         from repro.launch.mesh import make_mesh
         from repro.training.optimizer import OptimizerConfig as OC

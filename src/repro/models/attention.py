@@ -16,13 +16,12 @@ partitioner emits the split-KV (flash-decoding) max/sum all-reduces.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard_act
-from repro.models.layers import rmsnorm, rope, rope_decode
+from repro.models.layers import rmsnorm, rope
 from repro.models.spec import P
 
 __all__ = [

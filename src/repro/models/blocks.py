@@ -23,7 +23,6 @@ from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import ssd as ssd_mod
 from repro.models.layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
-from repro.models.spec import P
 
 __all__ = ["block_spec", "cache_spec", "block_full", "block_prefill", "block_decode"]
 

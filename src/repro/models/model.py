@@ -6,7 +6,6 @@ caches) flows through arguments so every method jits/lowers cleanly.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -51,10 +51,14 @@ class EdgeServer:
         prompt_fn: Optional[Callable[[Request], np.ndarray]] = None,
         workers=None,
         memory_capacity_bytes: int | None = None,
+        pipeline: bool = False,
     ):
         """``workers`` (a sequence of ``core.multiworker.Worker``) switches
         scheduling to §VII multi-worker placement; without it the policy
-        schedules the single worker 0."""
+        schedules the single worker 0.  ``pipeline`` feeds every window
+        through a persistent ``core.pipeline.WindowPipeline`` (fused
+        jitted Eq. 9/12 + Eq. 2/13 selection, compiled once and reused
+        across windows); single-worker scheduling only."""
         self.apps = dict(apps)
         self.policy = policy
         self.executor = executor
@@ -74,6 +78,13 @@ class EdgeServer:
             worker_ids=[w.wid for w in self.workers] if self.workers else None,
         )
         self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
+        self._pipeline = None
+        if pipeline and not self.workers:
+            from repro.core.pipeline import WindowPipeline
+
+            self._pipeline = WindowPipeline(
+                self._eff_apps, sneakpeeks=sneakpeeks, policy=policy
+            )
 
     def submit(self, request: Request):
         self.queue.submit(request)
@@ -85,13 +96,19 @@ class EdgeServer:
             return None
         from repro.core.sneakpeek import attach_sneakpeek
 
-        if self.sneakpeeks:
-            attach_sneakpeek(requests, self.apps, self.sneakpeeks)
-        t0 = time.perf_counter()
-        sched, eff_apps = schedule_window(
-            self.policy, requests, self._eff_apps, now,
-            workers=self.workers, state=self.state,
-        )
+        if self._pipeline is not None:
+            # Fused data plane: batched ingest + compiled window program
+            # (reused across windows), peeking the carried state.
+            self._pipeline.ingest(requests)
+            sched = self._pipeline.schedule(requests, now, state=self.state)
+            eff_apps = self._eff_apps
+        else:
+            if self.sneakpeeks:
+                attach_sneakpeek(requests, self.apps, self.sneakpeeks)
+            sched, eff_apps = schedule_window(
+                self.policy, requests, self._eff_apps, now,
+                workers=self.workers, state=self.state,
+            )
         res = evaluate(sched, eff_apps, now, acc_mode="oracle", state=self.state)
         self.stats.windows += 1
         self.stats.requests += len(requests)

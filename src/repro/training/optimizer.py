@@ -135,7 +135,8 @@ def adamw_step(grads, opt_state, params, cfg: OptimizerConfig):
     bc1 = 1.0 - b1 ** step.astype(jnp.float32)
     bc2 = 1.0 - b2 ** step.astype(jnp.float32)
 
-    is_moment = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    def is_moment(x):
+        return isinstance(x, dict) and set(x) == {"q", "scale"}
 
     def upd(g, m, v, master):
         g = g.astype(jnp.float32) * clip

@@ -75,8 +75,6 @@ def test_prefill_decode_matches_forward(arch, rng):
 
 
 def test_all_assigned_archs_are_registered():
-    from repro.configs.registry import ALIASES
-
     assigned = [
         "musicgen-medium", "tinyllama-1.1b", "gemma-7b", "gemma3-4b", "granite-8b",
         "llama4-scout-17b-a16e", "llama4-maverick-400b-a17b", "recurrentgemma-9b",

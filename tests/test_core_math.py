@@ -20,7 +20,7 @@ from repro.core.dirichlet import (
     jeffreys_prior,
     posterior,
     posterior_mean,
-    posterior_variance,
+    posterior_mean_batch,
     strongly_informative_prior,
     weakly_informative_prior,
 )
@@ -116,6 +116,44 @@ def test_prior_validation():
         DirichletPrior(np.array([0.5, 0.0]))
     with pytest.raises(ValueError):
         weakly_informative_prior(np.array([0.5, 0.6]))
+
+
+@given(
+    st.integers(2, 6),
+    st.integers(1, 12),
+    st.lists(st.integers(0, 20), min_size=12, max_size=120),
+)
+@settings(max_examples=50, deadline=None)
+def test_posterior_mean_batch_matches_per_row(nc, rows, counts):
+    """The batched Eq. 11 update is row-identical to the scalar update."""
+    counts = (counts + [0] * (rows * nc))[: rows * nc]
+    y = np.asarray(counts, float).reshape(rows, nc)
+    prior = jeffreys_prior(nc)
+    batch = posterior_mean_batch(prior, y)
+    assert batch.shape == (rows, nc)
+    for i in range(rows):
+        np.testing.assert_array_equal(batch[i], posterior_mean(prior, y[i]))
+
+
+def test_posterior_mean_batch_matches_per_row_example():
+    """Example-based twin of the property test (runs without hypothesis)."""
+    rng = np.random.default_rng(0)
+    for prior in (jeffreys_prior(4), weakly_informative_prior(np.array([0.7, 0.1, 0.1, 0.1]))):
+        y = rng.integers(0, 10, size=(32, 4)).astype(float)
+        batch = posterior_mean_batch(prior, y)
+        np.testing.assert_allclose(batch.sum(axis=1), 1.0, atol=1e-12)
+        for i in range(len(y)):
+            np.testing.assert_array_equal(batch[i], posterior_mean(prior, y[i]))
+
+
+def test_posterior_mean_batch_validation():
+    prior = jeffreys_prior(3)
+    with pytest.raises(ValueError):  # negative evidence
+        posterior_mean_batch(prior, np.array([[1.0, -1.0, 0.0]]))
+    with pytest.raises(ValueError):  # class-count mismatch
+        posterior_mean_batch(prior, np.zeros((4, 2)))
+    with pytest.raises(ValueError):  # not a matrix
+        posterior_mean_batch(prior, np.zeros(3))
 
 
 # ---------------------------------------------------------------- Eq. 2 penalties

@@ -7,10 +7,8 @@ import sys
 import textwrap
 from pathlib import Path
 
-import jax
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec
+from jax.sharding import PartitionSpec
 
 from repro.configs import ARCHS
 from repro.distributed.policies import default_mode, make_policy

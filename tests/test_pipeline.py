@@ -1,0 +1,205 @@
+"""Parity suite for the device-resident window pipeline (repro.core.pipeline).
+
+The fused jitted programs (Eq. 9/12 + device-side Eq. 2/13 selection — the
+lax.scan selector for the locally-optimal policies, argmax tiles for
+MaxAcc/grouped) must reproduce the numpy fast path and the scalar
+reference decision-for-decision across all five policies, with and
+without SneakPeek posteriors, and under carried streaming state."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    POLICY_NAMES,
+    Simulation,
+    StreamingState,
+    WindowPipeline,
+    evaluate,
+    make_policy,
+)
+from repro.core.pipeline import get_pipeline_backend, set_pipeline_backend
+from repro.core.sneakpeek import attach_sneakpeek
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+
+def _window(per_app=6, seed=0, theta="all"):
+    """One randomized window; ``theta`` = "all" | "some" | "none"."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs = make_requests(
+        list(APP_SPECS.values()), per_app=per_app, deadline_std_s=0.05, seed=seed
+    )
+    if theta != "none":
+        attach_sneakpeek(reqs, apps, sneaks)
+        if theta == "some":
+            for r in reqs[::3]:
+                r.theta = None
+                r.evidence = None
+    return reqs, apps, sneaks
+
+
+def _sig(sched):
+    return [
+        (e.request.rid, e.model, e.order, e.batch_id, e.worker)
+        for e in sched.sorted_entries()
+    ]
+
+
+# ---------------------------------------------------------------- policies
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("seed,theta", [(0, "all"), (1, "some"), (2, "none")])
+def test_pipeline_policy_parity(policy, seed, theta):
+    """Pipeline == numpy fast path == scalar reference: identical
+    schedules, utilities matching to 1e-9."""
+    reqs, apps, _ = _window(per_app=6, seed=seed, theta=theta)
+    pipe = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+    fast = make_policy(policy).schedule(reqs, apps, 0.1)
+    slow = make_policy(policy, fastpath=False).schedule(reqs, apps, 0.1)
+    assert _sig(pipe) == _sig(fast) == _sig(slow)
+    rp = evaluate(pipe, apps, 0.1, acc_mode="oracle")
+    rs = evaluate(slow, apps, 0.1, acc_mode="oracle")
+    np.testing.assert_allclose(rp.utilities, rs.utilities, atol=1e-9, rtol=0)
+    np.testing.assert_allclose(rp.completions, rs.completions, atol=1e-9, rtol=0)
+
+
+# ----------------------------------------------------- scan selector (Eq. 13)
+
+
+@pytest.mark.parametrize("policy", ["LO-EDF", "LO-Priority"])
+@pytest.mark.parametrize("seed", range(4))
+def test_scan_selector_parity(policy, seed):
+    """Satellite: the lax.scan sequential selector threads the queue-tail
+    time exactly like the numpy fast path's Python loop and the scalar
+    reference — selections, orderings, start times, and utilities."""
+    reqs, apps, _ = _window(per_app=7, seed=seed, theta="some")
+    pipe = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+    fast = make_policy(policy).schedule(reqs, apps, 0.1)
+    slow = make_policy(policy, fastpath=False).schedule(reqs, apps, 0.1)
+    assert _sig(pipe) == _sig(fast) == _sig(slow)
+    by_order = {e.order: e for e in pipe.sorted_entries()}
+    for e in fast.sorted_entries():
+        np.testing.assert_allclose(by_order[e.order].est_start_s, e.est_start_s, atol=1e-9)
+        np.testing.assert_allclose(by_order[e.order].est_latency_s, e.est_latency_s, atol=1e-9)
+    rp = evaluate(pipe, apps, 0.1, acc_mode="oracle")
+    rs = evaluate(slow, apps, 0.1, acc_mode="oracle")
+    np.testing.assert_allclose(rp.utilities, rs.utilities, atol=1e-9, rtol=0)
+
+
+@pytest.mark.parametrize("policy", ["LO-EDF", "LO-Priority"])
+def test_scan_selector_parity_with_carried_state(policy):
+    """Satellite: scan parity must survive a carried StreamingState — the
+    compiled selector seeds the same queue tail and resident model as the
+    host timelines, and scheduling never commits to the state."""
+    reqs, apps, _ = _window(per_app=5, seed=0, theta="all")
+    states = [StreamingState() for _ in range(3)]
+    for st in states:
+        warm = make_policy(policy).schedule(reqs, apps, 0.1, state=st)
+        evaluate(warm, apps, 0.1, state=st)
+    reqs2, _, _ = _window(per_app=5, seed=1, theta="all")
+    pipe = make_policy(policy, pipeline=True).schedule(reqs2, apps, 0.2, state=states[0])
+    fast = make_policy(policy).schedule(reqs2, apps, 0.2, state=states[1])
+    slow = make_policy(policy, fastpath=False).schedule(reqs2, apps, 0.2, state=states[2])
+    assert _sig(pipe) == _sig(fast) == _sig(slow)
+    for a, b in zip(states[0].timelines.values(), states[1].timelines.values()):
+        assert a.t == b.t and list(a._resident) == list(b._resident)
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_pipeline_streaming_state_parity(policy):
+    """All five policies under a carried state (single-slot residency)."""
+    reqs, apps, _ = _window(per_app=5, seed=2, theta="some")
+    st_p, st_s = StreamingState(), StreamingState()
+    for st in (st_p, st_s):
+        warm = make_policy(policy).schedule(reqs, apps, 0.1, state=st)
+        evaluate(warm, apps, 0.1, state=st)
+    reqs2, _, _ = _window(per_app=5, seed=3, theta="some")
+    pipe = make_policy(policy, pipeline=True).schedule(reqs2, apps, 0.2, state=st_p)
+    slow = make_policy(policy, fastpath=False).schedule(reqs2, apps, 0.2, state=st_s)
+    assert _sig(pipe) == _sig(slow)
+
+
+def test_pipeline_capacity_state_falls_back_to_host_path():
+    """Capacity-based (multi-model) residency exceeds the single-slot scan
+    semantics: the pipeline must route through the host fast path and
+    still match the scalar reference."""
+    reqs, apps, _ = _window(per_app=5, seed=4, theta="all")
+    cap = 512 * 2**20
+    st_p = StreamingState(memory_capacity_bytes=cap)
+    st_s = StreamingState(memory_capacity_bytes=cap)
+    for st in (st_p, st_s):
+        warm = make_policy("LO-EDF").schedule(reqs, apps, 0.1, state=st)
+        evaluate(warm, apps, 0.1, state=st)
+    reqs2, _, _ = _window(per_app=5, seed=5, theta="all")
+    pipe = make_policy("LO-EDF", pipeline=True).schedule(reqs2, apps, 0.2, state=st_p)
+    slow = make_policy("LO-EDF", fastpath=False).schedule(reqs2, apps, 0.2, state=st_s)
+    assert _sig(pipe) == _sig(slow)
+
+
+# ---------------------------------------------------------------- backends
+
+
+def test_numpy_backend_delegates_to_fast_path():
+    reqs, apps, _ = _window(per_app=4, seed=6, theta="all")
+    assert get_pipeline_backend() == "auto"
+    set_pipeline_backend("numpy")
+    try:
+        for policy in POLICY_NAMES:
+            pipe = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+            fast = make_policy(policy).schedule(reqs, apps, 0.1)
+            assert _sig(pipe) == _sig(fast), policy
+    finally:
+        set_pipeline_backend("auto")
+    with pytest.raises(ValueError):
+        set_pipeline_backend("tpu-v9")
+
+
+def test_window_pipeline_ingest_then_schedule():
+    """WindowPipeline.run == batched attach + policy schedule."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs_a = make_requests(list(APP_SPECS.values()), per_app=4, seed=7)
+    reqs_b = [
+        type(r)(r.rid, r.app, r.arrival_s, r.deadline_s, r.features, r.true_label)
+        for r in reqs_a
+    ]
+    pol = make_policy("SneakPeek")
+    wp = WindowPipeline(apps, sneakpeeks=sneaks, policy=make_policy("SneakPeek", pipeline=True))
+    sched_p = wp.run(reqs_a, 0.1)
+    attach_sneakpeek(reqs_b, apps, sneaks)
+    sched_f = pol.schedule(reqs_b, apps, 0.1)
+    assert _sig(sched_p) == _sig(sched_f)
+    for a, b in zip(reqs_a, reqs_b):
+        np.testing.assert_array_equal(a.evidence, b.evidence)
+        np.testing.assert_array_equal(a.theta, b.theta)
+
+
+def test_empty_window():
+    _, apps, _ = _window(per_app=2, seed=0, theta="none")
+    assert len(make_policy("LO-EDF", pipeline=True).schedule([], apps, 0.1)) == 0
+
+
+# ---------------------------------------------------------------- streaming
+
+
+def test_simulation_pipeline_matches_fast_path():
+    """Multi-window streaming through the pipeline: same realized metrics
+    as the fast path (compiled programs reused across windows)."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs, rid = [], 0
+    for w in range(5):
+        batch = make_requests(
+            list(APP_SPECS.values()), per_app=4, seed=w, start_rid=rid
+        )
+        for r in batch:
+            r.arrival_s += w * 0.1
+            r.deadline_s += w * 0.1
+        rid += len(batch)
+        reqs.extend(batch)
+    for policy in ("LO-Priority", "SneakPeek"):
+        base = Simulation(
+            make_policy(policy), apps, sneakpeeks=sneaks, seed=11
+        ).run(list(reqs))
+        pipe = Simulation(
+            make_policy(policy, pipeline=True), apps, sneakpeeks=sneaks, seed=11,
+            pipeline=True,
+        ).run(list(reqs))
+        assert base == pipe, policy

@@ -4,7 +4,6 @@ import pytest
 
 from repro.core import (
     ConfusionSneakPeek,
-    DecisionRuleSneakPeek,
     KNNSneakPeek,
     attach_sneakpeek,
     expected_accuracy,
@@ -93,6 +92,60 @@ def test_confusion_sneakpeek_accuracy_controls_quality():
             for r in rs for m in app.models
         ]))
     assert errs[2] < errs[1] < errs[0]
+
+
+def test_knn_votes_scatter_matches_bincount_loop():
+    """Regression: the np.add.at scatter in KNNSneakPeek._votes counts
+    exactly what the per-row bincount loop counted."""
+    spec = APP_SPECS["heart_monitoring"]
+    rng = np.random.default_rng(3)
+    x, y = make_dataset(spec, 300, rng)
+    q, _ = make_dataset(spec, 64, rng)
+    for k in (1, 5, 11):
+        sp = KNNSneakPeek(x, y, spec.num_classes, k=k, backend="numpy", seed=1)
+        votes = sp._votes(q)
+        assert votes.shape == (64, spec.num_classes)
+        np.testing.assert_allclose(votes.sum(axis=1), min(k, len(sp.train_x)))
+        # reference: per-row exact search + bincount
+        d2 = ((q[:, None, :] - sp.train_x[None, :, :]) ** 2).sum(-1)
+        kk = min(k, sp.train_x.shape[0])
+        nn = np.argpartition(d2, kth=kk - 1, axis=1)[:, :kk]
+        ref = np.stack([
+            np.bincount(sp.train_y[nn[b]], minlength=spec.num_classes)
+            for b in range(q.shape[0])
+        ])
+        np.testing.assert_array_equal(votes, ref)
+
+
+def test_confusion_evidence_batch_matches_sequential_draws():
+    """One vectorized multinomial draw == per-request draws in batch
+    order under the same seed (call-order independence satellite)."""
+    labels = [0, 3, 1, 1, 5, 2, 0, 4]
+    sp_a = ConfusionSneakPeek(6, accuracy=0.8, k=5, seed=123)
+    seq = np.stack([sp_a.evidence(None, t) for t in labels])
+    sp_b = ConfusionSneakPeek(6, accuracy=0.8, k=5, seed=123)
+    bat = sp_b.evidence_batch(np.zeros((len(labels), 4)), labels)
+    np.testing.assert_array_equal(seq, bat)
+    np.testing.assert_allclose(bat.sum(axis=1), 5.0)
+    with pytest.raises(ValueError):
+        sp_b.evidence_batch(np.zeros((2, 4)), [0, None])
+    with pytest.raises(ValueError):
+        sp_b.evidence_batch(np.zeros((2, 4)))
+
+
+def test_ingest_window_matches_per_request_attach():
+    """The batched ingest fills the same evidence/theta the per-request
+    loop filled (KNN evidence is deterministic)."""
+    from repro.core.dirichlet import posterior_mean
+
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=5, seed=9)
+    attach_sneakpeek(reqs, apps, sneaks)
+    for r in reqs:
+        sp = sneaks[r.app]
+        y = sp.evidence(r.features, r.true_label)
+        np.testing.assert_array_equal(r.evidence, y)
+        np.testing.assert_array_equal(r.theta, posterior_mean(apps[r.app].prior, y))
 
 
 def test_knn_jax_backend_matches_numpy():

@@ -1,6 +1,5 @@
 """Training substrate: optimizer, checkpointing, fault tolerance, compression."""
 import os
-import signal
 import tempfile
 
 import jax
@@ -42,7 +41,9 @@ def test_adamw_matches_reference_numpy():
     cfg = OptimizerConfig(learning_rate=1e-2, warmup_steps=0, total_steps=10**9,
                           weight_decay=0.1, grad_clip=0.0, min_lr_ratio=1.0)
     state = init_opt_state(params, cfg)
-    m = np.zeros_like(w); v = np.zeros_like(w); wn = w.copy()
+    m = np.zeros_like(w)
+    v = np.zeros_like(w)
+    wn = w.copy()
     for step in range(1, 6):
         g = rng.normal(size=w.shape).astype(np.float32)
         params, state, _ = adamw_step({"w": jnp.asarray(g)}, state, params, cfg)
