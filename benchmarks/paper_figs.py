@@ -18,9 +18,9 @@ from benchmarks.common import (
     save_result,
 )
 from repro.core import (
+    Application,
     ConfusionSneakPeek,
     ModelProfile,
-    Application,
     Worker,
     attach_sneakpeek,
     evaluate,

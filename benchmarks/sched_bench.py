@@ -24,6 +24,14 @@ and schedule-only, gated on the compiled lax.scan selector cells
 (LO-EDF / LO-Priority at 1024 requests must at least match the fast
 path's schedule-only throughput).
 
+``--pipeline`` together with ``--workers`` adds a fourth section: the
+compiled Eq. 15 multi-worker placement program (the (worker, model)
+utility-tile scan threading per-worker busy-until times + LRU residency
+slots) against ``fastpath.fast_multiworker_schedule``, grouped and
+per-request, with one persistent ``WindowPipeline`` per cell so the
+compiled program is reused across timed windows.  Gate: every cell at
+1024 requests x 2 workers must at least match the numpy fast path.
+
 Writes ``BENCH_sched.json`` at the repo root (plus a copy under
 results/benchmarks/) and prints a table.  Acceptance gates: the
 SneakPeek x 1024-request cell must exceed 5x, and the 2-worker x
@@ -181,6 +189,77 @@ def run_pipeline(sizes, policies, min_time_s=0.2):
     return rows
 
 
+def run_pipeline_multiworker(sizes, worker_counts, min_time_s=0.2):
+    """Compiled Eq. 15 placement (repro.core.pipeline) vs the numpy
+    multi-worker fast path, grouped (SneakPeek knobs) and per-request
+    (LO) placement over heterogeneous pools.  One persistent
+    ``WindowPipeline`` per cell: the compiled placement program is built
+    once and reused across every timed window."""
+    try:
+        import jax  # noqa: F401
+
+        from repro.core.pipeline import WindowPipeline
+    except ImportError:
+        print("pipeline multiworker section skipped (JAX unavailable)", flush=True)
+        return []
+    rows = []
+    variants = [("MW-SneakPeek", "SneakPeek", False), ("MW-LO-PerRequest", "LO-EDF", True)]
+    for n in sizes:
+        reqs, apps, _ = build_window(n)
+        actual_n = len(reqs)
+        for nw in worker_counts:
+            workers = heterogeneous_pool(nw)
+            for label, pname, per_req in variants:
+                pol = make_policy(pname)
+                kw = dict(
+                    data_aware=pol.data_aware,
+                    split_by_label=pol.split_by_label,
+                    per_request=per_req,
+                )
+                wp = WindowPipeline(
+                    apps, policy=make_policy(pname, pipeline=True), workers=workers
+                )
+
+                def pipe():
+                    return wp.schedule(reqs, 0.1)
+
+                def fast():
+                    return multiworker_schedule(reqs, apps, workers, 0.1, **kw)
+
+                pipe()  # compile the placement program outside the timing
+                # Gate cells (1024 x 2) get a long interleaved window: the
+                # >=1x ratio gate must hold to a few % under host noise.
+                cell_time = (
+                    max(min_time_s, 1.0)
+                    if actual_n >= 1000 and nw == 2
+                    else min_time_s
+                )
+                t_fast, t_pipe = time_pair(fast, pipe, cell_time)
+                u_pipe = evaluate(pipe(), apps, 0.1).mean_utility
+                u_fast = evaluate(fast(), apps, 0.1).mean_utility
+                row = {
+                    "policy": label,
+                    "workers": nw,
+                    "requests": actual_n,
+                    "fast_s": t_fast,
+                    "pipeline_s": t_pipe,
+                    "fast_rps": actual_n / t_fast,
+                    "pipeline_rps": actual_n / t_pipe,
+                    "speedup": t_fast / t_pipe,
+                    "mean_utility_fast": u_fast,
+                    "mean_utility_pipeline": u_pipe,
+                }
+                rows.append(row)
+                print(
+                    f"[n={actual_n:5d}] mw-pipeline x{nw} {label:16s}"
+                    f" fast {row['fast_rps']:9.0f} rps | pipeline"
+                    f" {row['pipeline_rps']:9.0f} rps | speedup"
+                    f" {row['speedup']:5.2f}x",
+                    flush=True,
+                )
+    return rows
+
+
 def run_multiworker(sizes, worker_counts, min_time_s=0.2):
     """Eq. 15 placement throughput: scalar loop vs batched utility tiles."""
     rows = []
@@ -301,6 +380,11 @@ def main():
         if args.pipeline
         else []
     )
+    mw_pipe_rows = (
+        run_pipeline_multiworker(pipe_sizes, worker_counts, min_time_s=min_time_s)
+        if args.pipeline and worker_counts
+        else []
+    )
 
     gate = [
         r for r in rows
@@ -317,6 +401,12 @@ def main():
         r for r in pipe_rows
         if r["policy"].startswith("LO-") and abs(r["requests"] - 1024) <= len(APP_SPECS)
     ]
+    # The multi-worker pipeline gate: every compiled Eq. 15 cell at
+    # 1024 x 2 workers must at least match the numpy fast path.
+    mw_pipe_gate = [
+        r for r in mw_pipe_rows
+        if r["workers"] == 2 and abs(r["requests"] - 1024) <= len(APP_SPECS)
+    ]
     payload = {
         "benchmark": "sched_bench",
         "units": "scheduled-requests/sec (one full window pass)",
@@ -331,10 +421,14 @@ def main():
         "results": rows,
         "multiworker_results": mw_rows,
         "pipeline_results": pipe_rows,
+        "pipeline_multiworker_results": mw_pipe_rows,
         "sneakpeek_1024_speedup": gate[0]["speedup"] if gate else None,
         "multiworker_1024_speedup": mw_gate[0]["speedup"] if mw_gate else None,
         "pipeline_1024_speedup": (
             min(r["schedule_speedup"] for r in pipe_gate) if pipe_gate else None
+        ),
+        "pipeline_multiworker_1024x2_speedup": (
+            min(r["speedup"] for r in mw_pipe_gate) if mw_pipe_gate else None
         ),
     }
     out = Path(args.out)
@@ -349,7 +443,7 @@ def main():
     failed = False
     # Parity: every implementation pair must deliver the same mean utility
     # (identical decisions; the tolerance absorbs float accumulation).
-    for r in rows + mw_rows + pipe_rows:
+    for r in rows + mw_rows + pipe_rows + mw_pipe_rows:
         uf = r["mean_utility_fast"]
         us = r.get("mean_utility_scalar", r.get("mean_utility_pipeline"))
         if not np.isclose(uf, us, rtol=1e-6, atol=1e-9):
@@ -376,6 +470,14 @@ def main():
         print(
             f"Pipeline {r['policy']} @1024 schedule speedup: {sp:.2f}x"
             f" (target >= 1x vs fast path) [{status}]"
+        )
+    for r in mw_pipe_gate:
+        sp = r["speedup"]
+        status = "PASS" if sp >= 1.0 else "FAIL"
+        failed |= sp < 1.0
+        print(
+            f"MW-Pipeline {r['policy']} @1024x2 speedup: {sp:.2f}x"
+            f" (target >= 1x vs numpy multi-worker fast path) [{status}]"
         )
     if failed:
         sys.exit(1)

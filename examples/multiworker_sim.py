@@ -63,6 +63,20 @@ def main():
           f"violation_rate={out['violation_rate']:.2f}")
     print(f"  final state: {sim.state}")
 
+    print("\nEdgeServer: same trace, per-worker utilization from ServeStats")
+    from repro.serving.server import EdgeServer
+
+    server = EdgeServer(apps, make_policy("SneakPeek"), sneakpeeks=sneaks,
+                        short_circuit=True, window_s=0.1,
+                        workers=[Worker(0), Worker(1, speed=2.0)])
+    _, stats = server.run(fresh(trace))
+    per_worker = " ".join(
+        f"w{w}={u:.2f}" for w, u in stats.worker_utilization.items()
+    )
+    print(f"  windows={stats.windows} requests={stats.requests} "
+          f"violations={stats.violations} utility={stats.mean_utility:.3f}")
+    print(f"  span={stats.span_s*1e3:.1f}ms per-worker utilization: {per_worker}")
+
 
 if __name__ == "__main__":
     main()

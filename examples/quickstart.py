@@ -13,7 +13,7 @@ from repro.core import (
     make_policy,
     schedule_window,
 )
-from repro.data.applications import APP_SPECS, make_requests, make_sneakpeek, make_application
+from repro.data.applications import APP_SPECS, make_application, make_requests, make_sneakpeek
 
 
 def main():

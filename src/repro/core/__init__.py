@@ -23,7 +23,7 @@ from repro.core.fastpath import (
     precompute_windows,
     set_utility_backend,
 )
-from repro.core.grouping import grouped_schedule, group_by_app, split_groups_by_label
+from repro.core.grouping import group_by_app, grouped_schedule, split_groups_by_label
 from repro.core.multiworker import Worker, multiworker_schedule
 from repro.core.pipeline import (
     WindowPipeline,
@@ -40,7 +40,6 @@ from repro.core.scheduler import (
     schedule_window,
 )
 from repro.core.simulator import Simulation, WindowResult, run_window
-from repro.core.streaming import StreamingState
 from repro.core.sneakpeek import (
     ConfusionSneakPeek,
     DecisionRuleSneakPeek,
@@ -49,6 +48,7 @@ from repro.core.sneakpeek import (
     attach_sneakpeek,
     ingest_window,
 )
+from repro.core.streaming import StreamingState
 from repro.core.types import Application, Request, Schedule, ScheduleEntry
 from repro.core.utility import PENALTIES, utility
 

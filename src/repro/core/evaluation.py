@@ -36,7 +36,17 @@ __all__ = ["WorkerTimeline", "estimate_accuracy", "evaluate", "EvalResult"]
 
 
 class WorkerTimeline:
-    """Sequential execution timeline of one worker with LRU model residency."""
+    """Sequential execution timeline of one worker with LRU model residency.
+
+    The residency semantics of ``_touch`` (MRU reorder on a resident hit;
+    append + oldest-first eviction via ``residency.evict_lru`` on a load,
+    the just-loaded model protected) have an array-encoded twin —
+    ``residency.touch_lru_array`` over fixed-size LRU slot vectors — used
+    by the multi-worker fast path and the compiled pipeline selectors;
+    tests/test_residency_property.py asserts the two agree on arbitrary
+    swap sequences.  ``StreamingState.to_arrays`` converts a carried pool
+    of these timelines into that encoding losslessly.
+    """
 
     def __init__(
         self,

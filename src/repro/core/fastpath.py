@@ -40,7 +40,10 @@ from repro.core.utility import PENALTIES
 
 __all__ = [
     "AppArrays",
+    "PoolArrays",
     "WindowArrays",
+    "placement_pref",
+    "sequential_mean",
     "set_utility_backend",
     "get_utility_backend",
     "utility_matrix",
@@ -392,7 +395,7 @@ def fast_per_request_schedule(
     order = wa.order_indices(ordering, data_aware)
     tl = None
     if state is not None:
-        tl = state.timeline(0).clone()
+        tl = state.peek_timeline(0).clone()
         tl.advance(now)
 
     max_acc_choice: dict[str, np.ndarray] = {}
@@ -540,7 +543,7 @@ def fast_grouped_schedule(
 
     wa = arrays if arrays is not None else WindowArrays(requests, apps, now)
     if state is not None:
-        tl = state.timeline(0).clone()
+        tl = state.peek_timeline(0).clone()
         tl.advance(now)
     else:
         tl = WorkerTimeline(now)
@@ -588,6 +591,174 @@ def fast_grouped_schedule(
 # --------------------------------------------------------------------------
 
 
+def sequential_mean(tile: np.ndarray, axis: int) -> np.ndarray:
+    """Member mean accumulated in the SCALAR order — ``total += u`` member
+    by member, then one divide — rather than numpy's pairwise reduction,
+    so group utilities stay bit-identical to the scalar reference and to
+    the compiled programs' ``pipeline._sequential_mean`` (which mirrors
+    this order).  One definition for every host site."""
+    tile = np.moveaxis(tile, axis, 0)
+    s = np.zeros_like(tile[0])
+    for j in range(tile.shape[0]):
+        s = s + tile[j]
+    return s / tile.shape[0]
+
+
+def placement_pref(
+    names: Sequence[str],
+    latency_s: np.ndarray,
+    speeds: np.ndarray,
+    wids: Sequence[int],
+    pad_to: int | None = None,
+) -> np.ndarray:
+    """Flattened (worker, model) candidate preference permutation — THE
+    Eq. 15 tie-break after utility: lower scaled latency, then larger
+    model name, then lower worker id.  First-max over this order equals
+    an argmax under the scalar key (u, -scaled latency, name, -wid).
+    ``pad_to`` pads the model axis for the stacked compiled tables
+    (padded candidates pushed last via infinite latency).  The single
+    definition is shared by the numpy fast path and the compiled
+    pipeline so the rule cannot drift between them.
+    """
+    m = len(names)
+    m_pad = pad_to if pad_to is not None else m
+    rank = np.zeros(m_pad, dtype=np.int64)
+    for pos, i in enumerate(sorted(range(m), key=lambda i: names[i])):
+        rank[i] = pos
+    slat = np.full((len(speeds), m_pad), np.inf)
+    slat[:, :m] = np.asarray(latency_s)[None, :] / np.asarray(speeds)[:, None]
+    wid_flat = np.repeat(np.asarray(wids), m_pad)
+    rank_flat = np.tile(rank, len(speeds))
+    return np.lexsort((wid_flat, -rank_flat, slat.ravel())).astype(np.int64)
+
+
+@dataclasses.dataclass
+class PoolArrays:
+    """Array-encoded worker-pool state: the single §VII representation.
+
+    Worker state is arrays, not objects — per-worker busy-until times,
+    fixed-size LRU residency slots (integer model ids, oldest first, -1
+    empty), effective byte sizes, and per-(worker, model) latency/swap
+    tables scaled by each worker's speed/load — shared verbatim by the
+    numpy ``fast_multiworker_schedule`` loop and the compiled Eq. 15
+    placement program in ``repro.core.pipeline``.  The capacity-``None``
+    single-slot residency is folded into the same LRU rule via
+    ``residency.single_slot_encoding`` (capacity 0 + unit sizes), so one
+    update — ``residency.touch_lru_array`` — covers both semantics.
+    """
+
+    workers: list  # multiworker.Worker, pool order
+    wids: list[int]
+    t: np.ndarray  # (W,) busy-until
+    res: np.ndarray  # (W, K) LRU slot ids, oldest first, -1 empty
+    sizes: np.ndarray  # (W, G) effective byte sizes (or units, single-slot)
+    capacity: float  # byte budget (0.0 encodes single-slot)
+    gids: dict[str, int]  # model name -> id
+    gid_names: list[str]
+    _tables: dict = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def build(cls, workers: Sequence, wa: "WindowArrays", state=None, now: float = 0.0):
+        """Encode ``state`` (or an idle pool at ``now``) against the
+        window's model universe plus any carried resident names."""
+        from repro.core.residency import single_slot_encoding
+
+        gids: dict[str, int] = {}
+        defaults: list[float] = []
+        for app_name in wa.req_idx:
+            app = wa.app_arrays[app_name].app
+            for m in app.models:
+                if m.name not in gids:
+                    gids[m.name] = len(gids)
+                    defaults.append(float(m.memory_bytes))
+        if state is not None:
+            # Carried resident names outside the window's model universe
+            # still need ids (they occupy LRU slots); their sizes come
+            # from the per-worker registered table (``reg``) when known,
+            # else 0 bytes — exactly the host rule's ``sizes.get(n, 0)``.
+            for w in workers:
+                tl = state.peek_timeline(w.wid)
+                for name in tl._resident:
+                    if name not in gids:
+                        gids[name] = len(gids)
+                        defaults.append(0.0)
+        gid_names = list(gids)
+        n_ids = len(gid_names)
+        n_w = len(workers)
+        wids = [w.wid for w in workers]
+        if state is not None:
+            t, res, reg = state.to_arrays(gids, wids=wids, slots=n_ids)
+            t = np.maximum(t, float(now))
+        else:
+            t = np.full(n_w, float(now))
+            res = np.full((n_w, n_ids), -1, dtype=np.int64)
+            reg = np.full((n_w, n_ids), -1.0)
+        if state is None or state.capacity is None:
+            unit, capacity = single_slot_encoding(n_ids)
+            sizes = np.tile(unit, (n_w, 1))
+        else:
+            capacity = float(state.capacity)
+            # _touch setdefaults the profile's memory_bytes at load time,
+            # so the effective per-worker size is the registered one when
+            # present and the static default otherwise.
+            sizes = np.where(reg >= 0, reg, np.asarray(defaults)[None, :])
+        return cls(
+            workers=list(workers),
+            wids=wids,
+            t=t,
+            res=res,
+            sizes=sizes,
+            capacity=capacity,
+            gids=gids,
+            gid_names=gid_names,
+        )
+
+    def app_table(self, wa: "WindowArrays", app_name: str):
+        """Per-(worker, model) scaled tables + the flattened tie-break
+        preference order (``placement_pref``) for one application,
+        cached per pool."""
+        tab = self._tables.get(app_name)
+        if tab is None:
+            aa = wa.app_arrays[app_name]
+            speeds = np.array([w.speed for w in self.workers])
+            load_scales = np.array([w.load_scale for w in self.workers])
+            tab = (
+                aa,
+                aa.lat_fixed[None, :] / speeds[:, None],  # (W, M)
+                aa.lat_item[None, :] / speeds[:, None],
+                aa.swap[None, :] * load_scales[:, None],
+                placement_pref(aa.names, aa.latency_s, speeds, self.wids),
+                np.asarray([self.gids[n] for n in aa.names], dtype=np.int64),
+            )
+            self._tables[app_name] = tab
+        return tab
+
+    def res_mode(self, state) -> str:
+        """Static residency-carry specialization for the compiled
+        programs: "slot1" when the single-slot encoding applies (no byte
+        capacity on the carried state) and no worker carries more than
+        one resident — the cheap scalar-id carry — else "lru" (the
+        general slot-vector carry).  One rule for every program."""
+        single = state is None or state.capacity is None
+        if single and int((self.res >= 0).sum(axis=1).max(initial=0)) <= 1:
+            return "slot1"
+        return "lru"
+
+    def resident_mask(self, gid_row: np.ndarray) -> np.ndarray:
+        """(W, M) bool: is ``gid_row[m]`` resident on worker w?"""
+        return (self.res[:, None, :] == gid_row[None, :, None]).any(axis=-1)
+
+    def place(self, wi: int, gid: int, completion: float) -> None:
+        """Commit one placement: set worker ``wi``'s busy-until time and
+        run the shared LRU residency update."""
+        from repro.core.residency import touch_lru_array
+
+        self.t[wi] = completion
+        self.res[wi], _ = touch_lru_array(
+            self.res[wi], int(gid), self.sizes[wi], self.capacity
+        )
+
+
 def fast_multiworker_schedule(
     requests: Sequence[Request],
     apps: Mapping[str, Application],
@@ -610,10 +781,12 @@ def fast_multiworker_schedule(
     O(groups x workers x models x members) Python calls.
 
     ``workers`` are ``multiworker.Worker``s (duck-typed: wid / speed /
-    load_scale / scaled()).  ``state`` seeds each worker's timeline from
-    the carried streaming state via clones.
+    load_scale).  Worker state — busy-until times, LRU residency slots,
+    scaled latency/swap tables — lives in a ``PoolArrays`` bundle, the
+    same array encoding the compiled pipeline placement consumes; the
+    carried ``state`` is read into it (never mutated: scheduling peeks,
+    evaluation commits).
     """
-    from repro.core.evaluation import WorkerTimeline
     from repro.core.grouping import group_by_app, split_groups_by_label
 
     if not requests:
@@ -632,61 +805,26 @@ def fast_multiworker_schedule(
     prio = wa.priorities(data_aware)
     member_idx = {key: wa.rows_of(members) for key, members in groups.items()}
     gp = {key: float(np.mean(prio[member_idx[key]])) for key in groups}  # Eq. 14
-    ordered_groups = sorted(groups.items(), key=lambda item: (-gp[item[0]], item[0]))
+    # Plain Eq. 14 priority order — multi-worker placement does not apply
+    # the single-worker same-app-adjacency rule (groups may land on
+    # different workers, so adjacency buys no swap amortization).
+    ordered_groups = ordered_group_items(groups, gp, split_by_label=False)
 
-    timelines: dict[int, WorkerTimeline] = {}
-    for w in workers:
-        if state is not None:
-            tl = state.timeline(w.wid).clone()
-            tl.advance(now)
-        else:
-            tl = WorkerTimeline(now)
-        timelines[w.wid] = tl
-    W = len(workers)
-    speeds = np.array([w.speed for w in workers])
-    load_scales = np.array([w.load_scale for w in workers])
+    pool = PoolArrays.build(workers, wa, state=state, now=now)
     orders = {w.wid: 1 for w in workers}
     entries: list[ScheduleEntry] = []
 
-    # Per-app (W, M) scaled latency/swap tables + name ranks, built once.
-    scaled_tables: dict[str, tuple] = {}
-
-    def app_table(app_name: str):
-        tab = scaled_tables.get(app_name)
-        if tab is None:
-            aa = wa.app_arrays[app_name]
-            m = len(aa.names)
-            rank = np.empty(m, dtype=np.int64)
-            for pos, i in enumerate(sorted(range(m), key=lambda i: aa.names[i])):
-                rank[i] = pos
-            tab = (
-                aa,
-                aa.lat_fixed[None, :] / speeds[:, None],  # (W, M)
-                aa.lat_item[None, :] / speeds[:, None],
-                aa.swap[None, :] * load_scales[:, None],
-                aa.latency_s[None, :] / speeds[:, None],  # tie-break key
-                np.tile(rank, W),
-                np.repeat(-np.array([w.wid for w in workers]), m),
-            )
-            scaled_tables[app_name] = tab
-        return tab
-
     for batch_id, (key, members) in enumerate(ordered_groups):
         app_name = members[0].app
-        aa, slat_fixed, slat_item, sswap, slat_key, rank_flat, negwid_flat = app_table(
-            app_name
-        )
+        aa, slat_fixed, slat_item, sswap, pref, gid_row = pool.app_table(wa, app_name)
         idx = member_idx[key]
         b = len(members)
-        # (W, M) completion times if this batch ran next on each candidate.
-        t_vec = np.array([timelines[w.wid].t for w in workers])
-        swap_eff = np.stack(
-            [
-                timelines[w.wid].swap_vector(aa.names, sswap[i])
-                for i, w in enumerate(workers)
-            ]
-        )
-        completions = t_vec[:, None] + swap_eff + slat_fixed + slat_item * b
+        # (W, M) completion times if this batch ran next on each candidate
+        # — same float association as peek_batch on the scaled profile,
+        # (t + swap) + l(m, b), so near-ties resolve like the scalar loop.
+        swap_eff = np.where(pool.resident_mask(gid_row), 0.0, sswap)
+        lat_b = slat_fixed + slat_item * b
+        completions = pool.t[:, None] + swap_eff + lat_b
         A_g = wa.acc_matrix(app_name, acc_mode)[wa.row_of[idx]]  # (B, M)
         tile = utility_matrix(
             A_g[None, :, :],
@@ -694,30 +832,28 @@ def fast_multiworker_schedule(
             completions[:, None, :],
             aa.app.penalty,
         )  # (W, B, M)
-        u_mean = tile.mean(axis=1)  # (W, M)
-        # argmax with the shared tie-break: utility, lower scaled latency,
-        # larger name, lower worker id.  lexsort keys run minor -> major.
-        pick = int(
-            np.lexsort(
-                (negwid_flat, rank_flat, -slat_key.ravel(), u_mean.ravel())
-            )[-1]
-        )
+        u_mean = sequential_mean(tile, axis=1)  # (W, M), scalar-order sum
+        # First-max over the preference permutation == argmax with the
+        # shared tie-break (utility, -scaled latency, name, -wid).
+        pick = int(pref[int(np.argmax(u_mean.ravel()[pref]))])
         wi, mi = divmod(pick, len(aa.names))
         w = workers[wi]
-        sm = w.scaled(aa.app.models[mi])
-        tl = timelines[w.wid]
-        start, completion = tl.run_batch(sm, b)
+        start = float(pool.t[wi])
+        # run_batch association: (start + swap) + l(m, b).
+        completion = (start + float(swap_eff[wi, mi])) + float(lat_b[wi, mi])
+        lat = completion - start
+        pool.place(wi, int(gid_row[mi]), completion)
         member_order = np.lexsort((wa.rids[idx], -prio[idx]))
         for j in member_order:
             entries.append(
                 ScheduleEntry(
                     request=wa.requests[int(idx[int(j)])],
-                    model=sm.name,
+                    model=aa.names[mi],
                     order=orders[w.wid],
                     worker=w.wid,
                     batch_id=batch_id,
                     est_start_s=start,
-                    est_latency_s=completion - start,
+                    est_latency_s=lat,
                 )
             )
             orders[w.wid] += 1

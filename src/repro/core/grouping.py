@@ -120,7 +120,7 @@ def grouped_schedule(
         groups = split_groups_by_label(groups, apps)
 
     if state is not None:
-        tl = state.timeline(0).clone()
+        tl = state.peek_timeline(0).clone()
         tl.advance(now)
     else:
         tl = WorkerTimeline(now)

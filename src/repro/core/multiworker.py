@@ -65,11 +65,15 @@ def multiworker_schedule(
 
     ``fastpath`` (default) delegates to the vectorized implementation in
     ``repro.core.fastpath``, which scores every (worker, model) candidate
-    of a placement step as one batched utility tile; pass False for this
-    scalar reference loop (identical decisions — see tests/test_fastpath.py).
-    ``state`` (streaming.StreamingState) seeds per-worker backlog and model
-    residency from the carried cross-window state; ``arrays`` is an
-    optional precomputed ``fastpath.WindowArrays`` (fast path only).
+    of a placement step as one batched utility tile over an array-encoded
+    pool state (``fastpath.PoolArrays``: busy-until times + LRU residency
+    slots + scaled latency/swap tables — the same representation the
+    compiled Eq. 15 pipeline program consumes); pass False for this
+    scalar reference loop (identical decisions — see tests/test_fastpath.py
+    and tests/test_pipeline.py).  ``state`` (streaming.StreamingState)
+    seeds per-worker backlog and model residency from the carried
+    cross-window state; ``arrays`` is an optional precomputed
+    ``fastpath.WindowArrays`` (fast path only).
     """
     if not requests:
         return Schedule()
@@ -105,7 +109,7 @@ def multiworker_schedule(
     timelines: dict[int, WorkerTimeline] = {}
     for w in workers:
         if state is not None:
-            tl = state.timeline(w.wid).clone()
+            tl = state.peek_timeline(w.wid).clone()
             tl.advance(now)
         else:
             tl = WorkerTimeline(now)

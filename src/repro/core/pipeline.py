@@ -25,22 +25,34 @@ fuses the whole window data plane into compiled programs:
     (members x models) Eq. 13 utility tile reduced to a masked mean and
     an argmax.  The brute-force branch (<= tau groups) delegates to the
     exact host solver, exactly as the fast path does.
+  * **Multi-worker placement** (paper §VII, Eq. 15) — a jitted
+    ``lax.scan`` over the priority-ordered groups whose body scores the
+    FULL (worker, model) utility tile, picks the argmax under the shared
+    tie-break (utility, -scaled latency, name, -wid) via a precomputed
+    preference permutation, and threads the per-worker busy-until times
+    and LRU residency slots functionally.  Worker state is the same
+    array encoding the numpy fast path uses (``fastpath.PoolArrays``).
+
+Residency is array-encoded everywhere: every scan carries fixed-size LRU
+slot vectors updated by the compiled form of
+``residency.touch_lru_array`` — capacity-aware multi-model eviction
+included, with the paper's conservative single-slot model folded in via
+``residency.single_slot_encoding`` (no host fallback for carried
+capacity states).
 
 Programs run under ``jax.experimental.enable_x64`` so decisions match
 the float64 numpy fast path and the scalar reference (the parity suite
 in tests/test_pipeline.py asserts identical schedules for all five
-policies).  Compiled programs are cached by their static configuration
-(policy knobs + per-app shape signature), so streaming runs with steady
-window shapes reuse them across windows.
+policies, single- and multi-worker, with and without capacity limits).
+Compiled programs are cached by their static configuration (policy knobs
++ per-app shape signature), so streaming runs with steady window shapes
+reuse them across windows.
 
 Escape hatches mirror the fast path's: ``make_policy(name,
 pipeline=True)`` turns the pipeline on per policy (default off),
 ``set_pipeline_backend("numpy")`` routes every pipeline schedule through
 the numpy fast path (decision-identical, no JAX needed), and the scalar
-reference remains ``make_policy(name, fastpath=False)``.  Carried
-streaming state is supported for the paper's conservative single-slot
-residency; capacity-based (multi-model) residency falls back to the
-numpy fast path, whose timelines implement the full LRU semantics.
+reference remains ``make_policy(name, fastpath=False)``.
 """
 from __future__ import annotations
 
@@ -119,7 +131,10 @@ def _penalty_jnp(pen_id, d, e):
     x = (e - d) / d
     linear = jnp.where(e <= d, 0.0, jnp.where(d <= 0, 1.0, jnp.minimum(1.0, x)))
     ratio = x / (1.0 - x)
-    inner = jnp.minimum(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+    # Multiply/divide-only ratio^-3 (no pow): XLA's pow is not correctly
+    # rounded, *, / are — keeps the device penalty bit-identical to the
+    # numpy/scalar forms in repro.core.utility.
+    inner = jnp.minimum(1.0, 1.0 / (1.0 + 1.0 / (ratio * ratio * ratio)))
     sigmoid = jnp.where(
         e <= d,
         0.0,
@@ -134,11 +149,69 @@ def _penalty_jnp(pen_id, d, e):
     )
 
 
-def _per_request_program(key, ordering, selection, data_aware, app_static):
+def _touch_residency(res, gid, sizes, cap):
+    """Compiled form of ``residency.touch_lru_array`` — ONE LRU slot-vector
+    update per model load, threaded functionally through the scans.
+
+    ``res`` is a (K,) id vector (LRU oldest first, -1 empty, empties
+    packed at the tail); ``sizes`` maps id -> effective bytes and ``cap``
+    is the byte budget (``residency.single_slot_encoding`` — unit sizes,
+    cap 0 — folds the capacity-``None`` single-slot model into the same
+    rule).  Returns (new_res, was_resident).
+    """
+    import jax.numpy as jnp
+
+    was = (res == gid).any()
+    removed = (res == gid) | (res < 0)
+    order = jnp.argsort(removed, stable=True)  # keepers first, order kept
+    kept = jnp.where(removed, -1, res)[order]
+    lru = kept.at[(~removed).sum()].set(gid)  # gid at the MRU tail
+    szs = jnp.where(lru >= 0, sizes[jnp.maximum(lru, 0)], 0.0)
+    # Eviction only accompanies a LOAD (a resident touch is a pure MRU
+    # reorder); the host loop evicts entry i iff evictable and the
+    # running total still exceeds capacity when the scan arrives there.
+    evictable = (lru >= 0) & (lru != gid) & ~was
+    freed_before = jnp.cumsum(jnp.where(evictable, szs, 0.0)) - jnp.where(
+        evictable, szs, 0.0
+    )
+    evict = evictable & (szs.sum() - freed_before > cap)
+    keep = (lru >= 0) & ~evict
+    return jnp.where(keep, lru, -1)[jnp.argsort(~keep, stable=True)], was
+
+
+def _sequential_mean(tile, mask, size, axis):
+    """Masked member mean with the SCALAR summation order (``total += u``
+    member by member) — not an XLA tree reduce — so near-tied group
+    utilities agree bit-for-bit with the host paths.  The member count is
+    static under jit: small batches unroll to straight-line adds, large
+    ones fall back to a fori_loop (same order, bounded program size).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b_max = tile.shape[axis]
+    take = (lambda j: tile[:, j]) if axis == 1 else (lambda j: tile[j])
+    zero = jnp.zeros_like(take(0))
+    if b_max <= 64:
+        s = zero
+        for j in range(b_max):
+            s = s + take(j) * mask[j]
+        return s / size
+    s = jax.lax.fori_loop(0, b_max, lambda j, acc: acc + take(j) * mask[j], zero)
+    return s / size
+
+
+def _per_request_program(key, ordering, selection, data_aware, app_static, res_mode):
     """One fused jitted program: Eq. 9/12 -> ordering -> Eq. 2/13 scan.
 
     ``app_static`` is a tuple of (num_models, has_theta) per application —
-    the static branch structure; everything else is traced.
+    the static branch structure; everything else is traced.  The scan
+    carries (queue-tail time, residency): ``res_mode`` statically picks
+    the carry — ``"slot1"`` (a single resident id: the paper's
+    conservative swap-on-every-change default, cheapest per step) or
+    ``"lru"`` (fixed-size LRU slot vectors updated by the compiled
+    ``residency.touch_lru_array`` form — capacity-aware multi-model
+    residency, the single-slot encoding included).
     """
     prog = _PROGRAMS.get(key)
     if prog is not None:
@@ -146,7 +219,7 @@ def _per_request_program(key, ordering, selection, data_aware, app_static):
     import jax
     import jax.numpy as jnp
 
-    def program(t0, res0, deadlines, arrivals, rids, app_id,
+    def program(t0, res0, sizes, cap, deadlines, arrivals, rids, app_id,
                 swap_tab, lat1_tab, gid_tab, valid_tab, pen_tab, per_app):
         n_total = deadlines.shape[0]
         m_max = swap_tab.shape[1]
@@ -184,7 +257,11 @@ def _per_request_program(key, ordering, selection, data_aware, app_static):
             t, res = carry
             aid = app_id[g]
             gid_row = gid_tab[aid]
-            swap_row = jnp.where(gid_row == res, 0.0, swap_tab[aid])
+            if res_mode == "slot1":
+                is_res = gid_row == res
+            else:
+                is_res = (gid_row[:, None] == res[None, :]).any(axis=-1)
+            swap_row = jnp.where(is_res, 0.0, swap_tab[aid])
             lat_row = lat1_tab[aid]
             if selection == "locally_optimal":
                 # Eq. 13 at the queue tail: every candidate scored at once.
@@ -194,8 +271,13 @@ def _per_request_program(key, ordering, selection, data_aware, app_static):
                 j = jnp.argmax(jnp.where(valid_tab[aid], u, -jnp.inf))
             else:
                 j = sel_all[g]
-            dt = swap_row[j] + lat_row[j]
-            return (t + dt, gid_row[j]), (j, t, dt)
+            # (t + swap) + l(m, 1): the fast path's queue-tail association.
+            comp = t + swap_row[j] + lat_row[j]
+            if res_mode == "slot1":
+                res = gid_row[j]
+            else:
+                res, _ = _touch_residency(res, gid_row[j], sizes, cap)
+            return (comp, res), (j, t, comp - t)
 
         _, (sel, starts, lats) = jax.lax.scan(step, (t0, res0), order, unroll=8)
         return order, sel, starts, lats
@@ -205,26 +287,41 @@ def _per_request_program(key, ordering, selection, data_aware, app_static):
     return prog
 
 
-def _grouped_program():
-    """Jitted scan over ordered groups: one greedy Eq. 13 tile per step."""
-    prog = _PROGRAMS.get("grouped")
+def _grouped_program(res_mode):
+    """Jitted scan over ordered groups: one greedy Eq. 13 tile per step.
+    ``res_mode`` statically picks the residency carry ("slot1" | "lru"),
+    exactly as in ``_per_request_program``."""
+    key = ("grouped", res_mode)
+    prog = _PROGRAMS.get(key)
     if prog is not None:
         return prog
     import jax
     import jax.numpy as jnp
 
-    def program(t0, res0, acc, member_mask, deadlines, sizes,
-                lat_fixed, lat_item, swap_tab, gid_tab, valid_tab, pen_tab):
+    def program(t0, res0, gsizes, cap, acc, member_mask, deadlines, sizes,
+                lat_tab, swap_tab, gid_tab, valid_tab, pen_tab):
         def step(carry, g):
             t, res = carry
-            swap_row = jnp.where(gid_tab[g] == res, 0.0, swap_tab[g])
-            completion = t + swap_row + lat_fixed[g] + lat_item[g] * sizes[g]
+            gid_row = gid_tab[g]
+            if res_mode == "slot1":
+                is_res = gid_row == res
+            else:
+                is_res = (gid_row[:, None] == res[None, :]).any(axis=-1)
+            swap_row = jnp.where(is_res, 0.0, swap_tab[g])
+            # lat_tab is the host-precomputed l(m, b) per group: the
+            # completion keeps peek_batch's (t + swap) + l(m, b) float
+            # association (adds only — no FMA re-rounding on device).
+            completion = t + swap_row + lat_tab[g]
             gam = _penalty_jnp(pen_tab[g], deadlines[g][:, None], completion[None, :])
             tile = acc[g] * (1.0 - jnp.clip(gam, 0.0, 1.0))  # (B_max, M_max)
-            u_mean = (tile * member_mask[g][:, None]).sum(axis=0) / sizes[g]
+            u_mean = _sequential_mean(tile, member_mask[g], sizes[g], axis=0)
             j = jnp.argmax(jnp.where(valid_tab[g], u_mean, -jnp.inf))
-            dt = swap_row[j] + lat_fixed[g][j] + lat_item[g][j] * sizes[g]
-            return (t + dt, gid_tab[g][j]), (j, t, dt)
+            comp = t + swap_row[j] + lat_tab[g, j]
+            if res_mode == "slot1":
+                res = gid_row[j]
+            else:
+                res, _ = _touch_residency(res, gid_row[j], gsizes, cap)
+            return (comp, res), (j, t, comp - t)
 
         n_groups = acc.shape[0]
         _, (sel, starts, lats) = jax.lax.scan(
@@ -233,7 +330,73 @@ def _grouped_program():
         return sel, starts, lats
 
     prog = jax.jit(program)
-    _PROGRAMS["grouped"] = prog
+    _PROGRAMS[key] = prog
+    return prog
+
+
+def _multiworker_program(res_mode):
+    """Compiled Eq. 15 placement: a jitted scan over the priority-ordered
+    groups whose body scores the full (worker, model) utility tile, picks
+    the argmax under the shared tie-break (utility, -scaled latency,
+    name, -wid) via the precomputed preference permutation, and threads
+    the per-worker busy-until times and LRU residency slots functionally.
+    One generic program serves every pool: the pool/app structure is data
+    (jit re-specializes on shapes only); ``res_mode`` statically picks
+    the per-worker residency carry ("slot1" | "lru").
+    """
+    key = ("multiworker", res_mode)
+    prog = _PROGRAMS.get(key)
+    if prog is not None:
+        return prog
+    import jax
+    import jax.numpy as jnp
+
+    def program(t0, res0, wsizes, cap, acc, member_mask, deadlines, bsizes,
+                app_id, lat_tab, sswap, gid_tab, valid_tab, pen_tab, pref_tab):
+        m_max = gid_tab.shape[1]
+
+        def step(carry, g):
+            t, res = carry
+            aid = app_id[g]
+            gid_row = gid_tab[aid]
+            # (W, M): is model m resident on worker w?
+            if res_mode == "slot1":
+                is_res = res[:, None] == gid_row[None, :]
+            else:
+                is_res = (res[:, None, :] == gid_row[None, :, None]).any(axis=-1)
+            swap_eff = jnp.where(is_res, 0.0, sswap[aid])
+            # lat_tab holds the host-precomputed scaled l(m, b) per group,
+            # so completions carry the exact peek_batch association
+            # (t + swap) + l(m, b) — adds only, no FMA re-rounding.
+            completion = t[:, None] + swap_eff + lat_tab[g]
+            gam = _penalty_jnp(
+                pen_tab[aid], deadlines[g][None, :, None], completion[:, None, :]
+            )
+            tile = acc[g][None, :, :] * (1.0 - jnp.clip(gam, 0.0, 1.0))  # (W, B, M)
+            u_mean = _sequential_mean(tile, member_mask[g], bsizes[g], axis=1)
+            u_flat = jnp.where(valid_tab[aid][None, :], u_mean, -jnp.inf).ravel()
+            # First max over the preference permutation == the scalar
+            # tie-break key (u, -scaled latency, name, -wid).
+            p = pref_tab[aid]
+            pick = p[jnp.argmax(u_flat[p])]
+            wi, mi = pick // m_max, pick % m_max
+            start = t[wi]
+            comp = start + swap_eff[wi, mi] + lat_tab[g, wi, mi]
+            if res_mode == "slot1":
+                res = res.at[wi].set(gid_row[mi])
+            else:
+                res_w, _ = _touch_residency(res[wi], gid_row[mi], wsizes[wi], cap)
+                res = res.at[wi].set(res_w)
+            return (t.at[wi].set(comp), res), (wi, mi, start, comp - start)
+
+        n_groups = acc.shape[0]
+        _, (wsel, sel, starts, lats) = jax.lax.scan(
+            step, (t0, res0), jnp.arange(n_groups), unroll=4
+        )
+        return wsel, sel, starts, lats
+
+    prog = jax.jit(program)
+    _PROGRAMS[key] = prog
     return prog
 
 
@@ -258,13 +421,19 @@ class WindowPipeline:
         sneakpeeks=None,
         policy=None,
         backend: str | None = None,
+        workers=None,
     ):
+        """``workers`` (a sequence of ``multiworker.Worker``) switches the
+        pipeline to the compiled Eq. 15 placement program: grouping /
+        data-awareness / label-splitting come from the policy, placement
+        from the (worker, model) utility tiles."""
         self.apps = apps
         self.sneakpeeks = sneakpeeks or {}
         self.policy = policy
         if backend is not None and backend not in ("auto", "jax", "numpy"):
             raise ValueError(f"unknown pipeline backend {backend!r}")
         self.backend = backend
+        self.workers = list(workers) if workers else None
 
     def resolved_backend(self) -> str:
         b = self.backend or _PIPELINE_BACKEND
@@ -291,25 +460,46 @@ class WindowPipeline:
         policy=None,
         state=None,
         arrays: WindowArrays | None = None,
+        workers=None,
     ) -> Schedule:
         policy = policy if policy is not None else self.policy
         if policy is None:
             raise ValueError("WindowPipeline needs a policy (init arg or call arg)")
+        workers = workers if workers is not None else self.workers
         t0 = time.perf_counter()
         if not requests:
             return Schedule()
         backend = self.resolved_backend()
-        seed = self._residency_seed(state, now)
-        if backend == "numpy" or seed is None:
-            # numpy reference (or residency semantics beyond the compiled
-            # single-slot scan): the decision-identical numpy fast path.
+        if workers:
+            if backend == "numpy":
+                sched = self._schedule_multiworker_numpy(
+                    policy, requests, now, workers, state, arrays
+                )
+            else:
+                sched = self._schedule_multiworker_jax(
+                    policy, requests, now, workers, state, arrays
+                )
+        elif backend == "numpy":
+            # The decision-identical numpy fast path.
             sched = self._schedule_numpy(policy, requests, now, state, arrays)
         elif policy.grouped:
-            sched = self._schedule_grouped_jax(policy, requests, now, seed, state, arrays)
+            sched = self._schedule_grouped_jax(policy, requests, now, state, arrays)
         else:
-            sched = self._schedule_per_request_jax(policy, requests, now, seed, arrays)
+            sched = self._schedule_per_request_jax(policy, requests, now, state, arrays)
         sched.scheduling_overhead_s = time.perf_counter() - t0
         return sched
+
+    def _schedule_multiworker_numpy(self, policy, requests, now, workers, state, arrays):
+        from repro.core.fastpath import fast_multiworker_schedule
+
+        return fast_multiworker_schedule(
+            requests, self.apps, workers, now,
+            data_aware=policy.data_aware,
+            split_by_label=policy.split_by_label,
+            per_request=not policy.grouped,
+            arrays=arrays,
+            state=state,
+        )
 
     def _schedule_numpy(self, policy, requests, now, state, arrays):
         if policy.grouped:
@@ -330,19 +520,28 @@ class WindowPipeline:
             state=state,
         )
 
-    def _residency_seed(self, state, now: float):
-        """(t0, resident-name) for the compiled single-slot scan, or None
-        when the carried state needs the host timelines (LRU capacity /
-        multi-model residency)."""
-        if state is None:
-            return float(now), None
-        if state.capacity is not None:
-            return None
-        tl = state.timeline(0).clone()
-        tl.advance(now)
-        if len(tl._resident) > 1:
-            return None
-        return float(tl.t), tl.mru
+    def _state_seed(self, wa: WindowArrays, state, now: float):
+        """Array-encoded single-worker seed for the compiled scans:
+        (t0, residency carry, effective sizes, capacity, res_mode).  The
+        same ``PoolArrays`` encoding the Eq. 15 path uses, restricted to
+        worker 0 — capacity-based multi-model residency included (the
+        former host-fast-path fallback is gone).  ``res_mode`` is the
+        static program specialization: "slot1" (capacity-``None``
+        semantics with at most one carried resident — a scalar id carry)
+        or "lru" (the general slot-vector carry)."""
+        from repro.core.fastpath import PoolArrays
+        from repro.core.multiworker import Worker
+
+        pool = PoolArrays.build([Worker(0)], wa, state=state, now=now)
+        res_mode = pool.res_mode(state)
+        res0 = np.int64(pool.res[0, 0]) if res_mode == "slot1" else pool.res[0]
+        return (
+            np.float64(pool.t[0]),
+            res0,
+            pool.sizes[0],
+            np.float64(pool.capacity),
+            res_mode,
+        )
 
     def _global_ids(self, wa: WindowArrays) -> dict[str, int]:
         """Residency ids by model NAME (the timelines' residency key)."""
@@ -396,12 +595,168 @@ class WindowPipeline:
             _TABLES.pop(next(iter(_TABLES)))
         return ent
 
+    def _mw_tables(self, wa: WindowArrays, workers, pool):
+        """Pool-scaled per-app model tables for the compiled Eq. 15
+        program — (A, W, M_max) latency/swap tiles plus the flattened
+        tie-break preference permutations — cached across windows per
+        (application set, pool signature).  The per-app tables come from
+        ``PoolArrays.app_table`` (padded to M_max here), so the scaling
+        math and the tie-break rule have exactly one definition shared
+        with the numpy fast path."""
+        app_names = list(wa.req_idx)
+        aas = [wa.app_arrays[n] for n in app_names]
+        key = (
+            "mw",
+            tuple(id(a) for a in aas),
+            tuple((w.wid, w.speed, w.load_scale) for w in workers),
+        )
+        ent = _TABLES.get(key)
+        if ent is not None:
+            _TABLES[key] = _TABLES.pop(key)  # LRU touch
+            return ent
+        from repro.core.fastpath import placement_pref
+
+        n_apps = len(app_names)
+        n_w = len(workers)
+        m_max = max(len(a.names) for a in aas)
+        speeds = np.array([w.speed for w in workers])
+        slat_fixed = np.zeros((n_apps, n_w, m_max))
+        slat_item = np.zeros((n_apps, n_w, m_max))
+        sswap = np.zeros((n_apps, n_w, m_max))
+        gid_tab = np.full((n_apps, m_max), -2, dtype=np.int64)  # -2: never resident
+        valid_tab = np.zeros((n_apps, m_max), dtype=bool)
+        pen_tab = np.zeros(n_apps, dtype=np.int64)
+        pref_tab = np.zeros((n_apps, n_w * m_max), dtype=np.int64)
+        for ai, name in enumerate(app_names):
+            aa, a_fixed, a_item, a_swap, _pref, gid_row = pool.app_table(wa, name)
+            m = len(aa.names)
+            slat_fixed[ai, :, :m] = a_fixed
+            slat_item[ai, :, :m] = a_item
+            sswap[ai, :, :m] = a_swap
+            gid_tab[ai, :m] = gid_row
+            valid_tab[ai, :m] = True
+            pen_tab[ai] = _PENALTY_ID[aa.app.penalty]
+            # The shared Eq. 15 tie-break permutation, padded to m_max.
+            pref_tab[ai] = placement_pref(
+                aa.names, aa.latency_s, speeds, pool.wids, pad_to=m_max
+            )
+        ent = {
+            "pin": aas,  # strong refs keep the id key sound
+            "app_names": app_names,
+            "m_max": m_max,
+            "slat_fixed": slat_fixed,
+            "slat_item": slat_item,
+            "sswap": sswap,
+            "gid": gid_tab,
+            "valid": valid_tab,
+            "pen": pen_tab,
+            "pref": pref_tab,
+        }
+        _TABLES[key] = ent
+        while len(_TABLES) > _TABLES_MAX:
+            _TABLES.pop(next(iter(_TABLES)))
+        return ent
+
+    def _schedule_multiworker_jax(self, policy, requests, now, workers, state, arrays):
+        from repro.core.fastpath import PoolArrays
+        from repro.core.grouping import group_by_app, split_groups_by_label
+
+        acc_mode = "sharpened" if policy.data_aware else "profiled"
+        if not policy.grouped:
+            groups = {f"r{r.rid}": [r] for r in requests}
+        else:
+            groups = group_by_app(requests)
+            if policy.split_by_label:
+                groups = split_groups_by_label(groups, self.apps)
+
+        # The Eq. 9/12 matrices feed the host-side assembly of the group
+        # tensors either way, so the numpy WindowArrays (bit-identical to
+        # the fast path's) beats a device round trip here; the compiled
+        # program owns the placement scan itself.
+        wa = arrays if arrays is not None else WindowArrays(requests, self.apps, now)
+
+        prio = wa.priorities(policy.data_aware)
+        member_idx = {key: wa.rows_of(members) for key, members in groups.items()}
+        gp = {key: float(np.mean(prio[member_idx[key]])) for key in groups}  # Eq. 14
+        # The fast path's multi-worker ordering rule, shared verbatim.
+        ordered_groups = ordered_group_items(groups, gp, split_by_label=False)
+
+        pool = PoolArrays.build(workers, wa, state=state, now=now)
+        tab = self._mw_tables(wa, workers, pool)
+        app_pos = {name: ai for ai, name in enumerate(tab["app_names"])}
+        m_max = tab["m_max"]
+
+        n_groups = len(ordered_groups)
+        n_w = len(workers)
+        b_max = max(len(members) for _, members in ordered_groups)
+        acc = np.zeros((n_groups, b_max, m_max))
+        member_mask = np.zeros((n_groups, b_max))
+        deadlines = np.ones((n_groups, b_max))
+        bsizes = np.zeros(n_groups)
+        app_id = np.zeros(n_groups, dtype=np.int64)
+        lat_tab = np.zeros((n_groups, n_w, m_max))
+        acc_mats = {name: wa.acc_matrix(name, acc_mode) for name in wa.req_idx}
+        for gi, (key, members) in enumerate(ordered_groups):
+            app_name = members[0].app
+            idx = member_idx[key]
+            b = len(members)
+            m = len(wa.app_arrays[app_name].names)
+            ai = app_pos[app_name]
+            acc[gi, :b, :m] = acc_mats[app_name][wa.row_of[idx]]
+            member_mask[gi, :b] = 1.0
+            deadlines[gi, :b] = wa.deadlines[idx]
+            bsizes[gi] = float(b)
+            app_id[gi] = ai
+            # Scaled l(m, b) for this group, precomputed on the host so the
+            # compiled completions match the numpy fast path bit-for-bit.
+            lat_tab[gi] = tab["slat_fixed"][ai] + tab["slat_item"][ai] * b
+
+        res_mode = pool.res_mode(state)
+        res0 = pool.res[:, 0].copy() if res_mode == "slot1" else pool.res
+        prog = _multiworker_program(res_mode)
+        with self._enable_x64():
+            wsel, sel, starts, lats = prog(
+                pool.t, res0, pool.sizes, np.float64(pool.capacity),
+                acc, member_mask, deadlines, bsizes, app_id,
+                lat_tab, tab["sswap"], tab["gid"], tab["valid"], tab["pen"],
+                tab["pref"],
+            )
+        wsel = np.asarray(wsel)
+        sel = np.asarray(sel)
+        starts = np.asarray(starts)
+        lats = np.asarray(lats)
+
+        orders = {w.wid: 1 for w in workers}
+        entries = []
+        for gi, (key, members) in enumerate(ordered_groups):
+            aa = wa.app_arrays[members[0].app]
+            idx = member_idx[key]
+            w = workers[int(wsel[gi])]
+            model = aa.names[int(sel[gi])]
+            member_order = np.lexsort((wa.rids[idx], -prio[idx]))
+            for j in member_order:
+                entries.append(
+                    ScheduleEntry(
+                        request=wa.requests[int(idx[int(j)])],
+                        model=model,
+                        order=orders[w.wid],
+                        worker=w.wid,
+                        batch_id=gi,
+                        est_start_s=float(starts[gi]),
+                        est_latency_s=float(lats[gi]),
+                    )
+                )
+                orders[w.wid] += 1
+        sched = Schedule(entries=entries)
+        sched.validate()
+        return sched
+
     def _enable_x64(self):
         from jax.experimental import enable_x64
 
         return enable_x64()
 
-    def _schedule_per_request_jax(self, policy, requests, now, seed, arrays):
+    def _schedule_per_request_jax(self, policy, requests, now, state, arrays):
         if policy.selection not in ("locally_optimal", "max_accuracy"):
             raise ValueError(f"unknown selection {policy.selection!r}")
         if policy.ordering not in ("fcfs", "edf", "priority"):
@@ -409,7 +764,6 @@ class WindowPipeline:
         wa = arrays if arrays is not None else WindowArrays(requests, self.apps, now)
         tab = self._window_tables(wa)
         app_names = tab["app_names"]
-        gids = tab["gids"]
         n_total = len(wa.requests)
 
         app_id = np.zeros(n_total, dtype=np.int64)
@@ -425,19 +779,18 @@ class WindowPipeline:
                 aa.R, aa.profiled, aa.sc, aa.tie_pref,
             ))
 
+        t0, res0, sizes0, cap, res_mode = self._state_seed(wa, state, now)
         key = (
             "per_request", policy.ordering, policy.selection,
-            bool(policy.data_aware), tuple(app_static),
+            bool(policy.data_aware), tuple(app_static), res_mode,
         )
         prog = _per_request_program(
             key, policy.ordering, policy.selection, bool(policy.data_aware),
-            tuple(app_static),
+            tuple(app_static), res_mode,
         )
-        t0, resident = seed
-        res0 = np.int64(gids.get(resident, -1))
         with self._enable_x64():
             order, sel, starts, lats = prog(
-                np.float64(t0), res0, wa.deadlines, wa.arrivals,
+                t0, res0, sizes0, cap, wa.deadlines, wa.arrivals,
                 np.asarray(wa.rids, dtype=np.int64), app_id,
                 tab["swap"], tab["lat1"], tab["gid"], tab["valid"], tab["pen"],
                 per_app,
@@ -465,7 +818,7 @@ class WindowPipeline:
         sched.validate()
         return sched
 
-    def _schedule_grouped_jax(self, policy, requests, now, seed, state, arrays):
+    def _schedule_grouped_jax(self, policy, requests, now, state, arrays):
         from repro.core.bruteforce import brute_force_groups
         from repro.core.evaluation import WorkerTimeline
         from repro.core.grouping import group_by_app, split_groups_by_label
@@ -487,7 +840,7 @@ class WindowPipeline:
 
         if len(groups) <= policy.tau:
             if state is not None:
-                tl = state.timeline(0).clone()
+                tl = state.peek_timeline(0).clone()
                 tl.advance(now)
             else:
                 tl = WorkerTimeline(now)
@@ -511,8 +864,7 @@ class WindowPipeline:
         member_mask = np.zeros((n_groups, b_max))
         deadlines = np.ones((n_groups, b_max))
         sizes = np.zeros(n_groups)
-        lat_fixed = np.zeros((n_groups, m_max))
-        lat_item = np.zeros((n_groups, m_max))
+        lat_tab = np.zeros((n_groups, m_max))
         swap_tab = np.zeros((n_groups, m_max))
         gid_tab = np.full((n_groups, m_max), -2, dtype=np.int64)
         valid_tab = np.zeros((n_groups, m_max), dtype=bool)
@@ -529,20 +881,19 @@ class WindowPipeline:
             member_mask[gi, :b] = 1.0
             deadlines[gi, :b] = wa.deadlines[idx]
             sizes[gi] = float(b)
-            lat_fixed[gi, :m] = aa.lat_fixed[pref]
-            lat_item[gi, :m] = aa.lat_item[pref]
+            # Host-precomputed l(m, b) (batch_latency association).
+            lat_tab[gi, :m] = (aa.lat_fixed + aa.lat_item * b)[pref]
             swap_tab[gi, :m] = aa.swap[pref]
             gid_tab[gi, :m] = [gids[aa.names[int(i)]] for i in pref]
             valid_tab[gi, :m] = True
             pen_tab[gi] = _PENALTY_ID[aa.app.penalty]
 
-        t0, resident = seed
-        res0 = np.int64(gids.get(resident, -1))
-        prog = _grouped_program()
+        t0, res0, gsizes, cap, res_mode = self._state_seed(wa, state, now)
+        prog = _grouped_program(res_mode)
         with self._enable_x64():
             sel, starts, lats = prog(
-                np.float64(t0), res0, acc, member_mask, deadlines, sizes,
-                lat_fixed, lat_item, swap_tab, gid_tab, valid_tab, pen_tab,
+                t0, res0, gsizes, cap, acc, member_mask, deadlines, sizes,
+                lat_tab, swap_tab, gid_tab, valid_tab, pen_tab,
             )
         sel = np.asarray(sel)
         starts = np.asarray(starts)
@@ -580,8 +931,11 @@ def pipeline_schedule(
     state=None,
     arrays: WindowArrays | None = None,
     backend: str | None = None,
+    workers=None,
 ) -> Schedule:
-    """One pipelined window pass for ``SchedulerPolicy.schedule``."""
-    return WindowPipeline(apps, policy=policy, backend=backend).schedule(
+    """One pipelined window pass for ``SchedulerPolicy.schedule`` /
+    ``schedule_window`` (``workers`` selects the Eq. 15 placement
+    program)."""
+    return WindowPipeline(apps, policy=policy, backend=backend, workers=workers).schedule(
         requests, now, state=state, arrays=arrays
     )

@@ -13,12 +13,27 @@ The single rule lives here:
     to execute, so a single model larger than capacity resides alone
     (over budget by design) rather than being spuriously dropped and
     re-charged on every use.
+
+The rule exists in two encodings that MUST agree (property-tested in
+tests/test_residency_property.py):
+
+  * ``evict_lru`` — the name-keyed host form (Python list, byte sizes by
+    name) used by ``WorkerTimeline`` and ``SwapManager``.
+  * ``touch_lru_array`` — the array form over fixed-size LRU slots
+    (integer model ids, -1 = empty, oldest first) shared by the numpy
+    multi-worker fast path and the compiled window-pipeline selectors.
+    ``single_slot_encoding`` maps the paper's conservative
+    capacity-``None`` single-slot model onto the same rule (capacity 0,
+    unit sizes): after loading, eviction strips every other resident,
+    leaving exactly ``[name]``.
 """
 from __future__ import annotations
 
 from typing import Mapping
 
-__all__ = ["evict_lru"]
+import numpy as np
+
+__all__ = ["evict_lru", "touch_lru_array", "single_slot_encoding"]
 
 
 def evict_lru(
@@ -48,3 +63,52 @@ def evict_lru(
         evicted.append(name)
         total -= sizes.get(name, 0)
     return evicted
+
+
+def single_slot_encoding(n_ids: int) -> tuple[np.ndarray, float]:
+    """(sizes, capacity) encoding the capacity-``None`` single-slot model
+    for ``touch_lru_array``: unit sizes against capacity 0 make eviction
+    strip every resident except the protected (just-loaded) model."""
+    return np.ones(n_ids, dtype=np.float64), 0.0
+
+
+def touch_lru_array(
+    res: np.ndarray,
+    gid: int,
+    sizes: np.ndarray,
+    capacity: float,
+) -> tuple[np.ndarray, bool]:
+    """Array form of the residency rule for ONE model load.
+
+    ``res`` is a fixed-size slot vector of model ids (LRU order, oldest
+    first, ``-1`` = empty slot, empties packed at the tail); ``sizes``
+    maps id -> bytes (index ``gid`` must be valid).  Returns the new slot
+    vector (same shape, fresh array) and whether ``gid`` was already
+    resident (i.e. whether the load is swap-free).
+
+    Decision-identical to ``WorkerTimeline._touch``: a resident model
+    moves to the MRU tail; a non-resident model is appended and then
+    ``evict_lru`` runs oldest-first, never evicting the just-loaded model
+    (the id-indexed equivalent of ``protect``).  With
+    ``single_slot_encoding`` this subsumes the capacity-``None``
+    single-slot special case.
+    """
+    res = np.asarray(res)
+    was_resident = bool((res == gid).any())
+    kept = res[(res >= 0) & (res != gid)]
+    lru = np.concatenate([kept, [gid]])  # gid at the MRU tail
+    szs = sizes[lru]
+    protect = lru == gid
+    # Eviction only accompanies a LOAD: touching a resident model is a
+    # pure MRU reorder (``_touch`` returns before the eviction pass).
+    evictable = ~protect if not was_resident else np.zeros(len(lru), dtype=bool)
+    # Freed bytes BEFORE the scan reaches each entry: the host loop evicts
+    # entry i iff it is evictable and the running total still exceeds
+    # capacity when the scan arrives there.
+    freed = np.cumsum(np.where(evictable, szs, 0.0))
+    freed_before = freed - np.where(evictable, szs, 0.0)
+    evict = evictable & (szs.sum() - freed_before > capacity)
+    survivors = lru[~evict]
+    out = np.full(res.shape, -1, dtype=res.dtype)
+    out[: len(survivors)] = survivors
+    return out, was_resident

@@ -118,7 +118,7 @@ class SchedulerPolicy:
         }[self.selection]
         ordered = order_fn(requests, apps, now, data_aware=self.data_aware)
         if state is not None:
-            tl = state.timeline(0).clone()
+            tl = state.peek_timeline(0).clone()
             tl.advance(now)
         else:
             tl = WorkerTimeline(now)
@@ -212,9 +212,11 @@ def schedule_window(
     policy to the paper's §VII multi-worker placement: grouping /
     data-awareness / label-splitting / fastpath come from the policy,
     placement from ``multiworker_schedule`` (``per_request`` for the
-    ungrouped policies).  ``state`` carries streaming backlog + residency;
-    ``arrays`` a precomputed ``fastpath.WindowArrays``.  Returns the
-    schedule and the (possibly short-circuit-augmented) application map.
+    ungrouped policies) — or from the compiled Eq. 15 placement program
+    (``repro.core.pipeline``) when the policy has ``pipeline=True``.
+    ``state`` carries streaming backlog + residency; ``arrays`` a
+    precomputed ``fastpath.WindowArrays``.  Returns the schedule and the
+    (possibly short-circuit-augmented) application map.
     """
     from repro.core.sneakpeek import attach_sneakpeek
 
@@ -222,6 +224,14 @@ def schedule_window(
         attach_sneakpeek(requests, apps, sneakpeeks)
     eff_apps = effective_apps(apps, sneakpeeks, short_circuit)
     if workers:
+        if policy.pipeline:
+            from repro.core.pipeline import pipeline_schedule
+
+            sched = pipeline_schedule(
+                policy, requests, eff_apps, now,
+                state=state, arrays=arrays, workers=workers,
+            )
+            return sched, eff_apps
         from repro.core.multiworker import multiworker_schedule
 
         t0 = time.perf_counter()

@@ -89,7 +89,7 @@ def group_locally_optimal(
     using avg group utility")."""
     b = len(requests)
     if arrays is not None:
-        from repro.core.fastpath import utility_matrix
+        from repro.core.fastpath import sequential_mean, utility_matrix
 
         aa = arrays.app_arrays[app.name]
         rows = arrays.rows_of(requests)
@@ -98,7 +98,8 @@ def group_locally_optimal(
         U = utility_matrix(
             A_g, arrays.deadlines[rows][:, None], comp[None, :], app.penalty
         )
-        return app.models[aa.argbest(U.mean(axis=0))]
+        # Scalar-order member sum: bit-identical on near-tied utilities.
+        return app.models[aa.argbest(sequential_mean(U, axis=0))]
     best, best_u = None, -np.inf
     for m in app.models:
         start, completion = timeline.peek_batch(m, b)

@@ -82,10 +82,10 @@ class Simulation:
         "numpy" (default, bit-compatible) or "jax" (jitted,
         device-resident, float32 on default configs).
       pipeline: feed every window through a ``pipeline.WindowPipeline``
-        (fused jitted Eq. 9/12 + Eq. 2/13 selection).  The pipeline
+        (fused jitted Eq. 9/12 + Eq. 2/13 selection; with a ``workers``
+        pool, the compiled Eq. 15 placement program).  The pipeline
         object persists across windows so streaming runs reuse the
-        compiled programs; single-worker scheduling only (a ``workers``
-        pool keeps the Eq. 15 placement path).
+        compiled programs.
     """
 
     def __init__(
@@ -125,10 +125,12 @@ class Simulation:
         # Application objects would also defeat AppArrays memoization).
         self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
         self._pipeline = None
-        if pipeline and not self.workers:
+        if pipeline:
             from repro.core.pipeline import WindowPipeline
 
-            self._pipeline = WindowPipeline(self._eff_apps, policy=policy)
+            self._pipeline = WindowPipeline(
+                self._eff_apps, policy=policy, workers=self.workers
+            )
         self.log: list[dict] = []
 
     @property

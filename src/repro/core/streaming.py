@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from typing import Iterator, Mapping, Sequence
 
+import numpy as np
+
 from repro.core.evaluation import WorkerTimeline
 
 __all__ = ["StreamingState"]
@@ -63,6 +65,14 @@ class StreamingState:
             self.timelines[wid] = tl
         return tl
 
+    def peek_timeline(self, wid: int) -> WorkerTimeline:
+        """Read-only view of worker ``wid``: the tracked timeline when it
+        exists, else a FRESH idle one that is NOT inserted — scheduling
+        peeks must leave the committed pool untouched (``timeline`` is
+        the committing accessor)."""
+        tl = self.timelines.get(wid)
+        return tl if tl is not None else WorkerTimeline(self._now, self.capacity)
+
     def advance(self, now: float) -> None:
         """Move the clock: idle workers become ready at ``now``; busy
         workers keep their backlog (their next batch starts later)."""
@@ -82,6 +92,78 @@ class StreamingState:
     def register_sizes(self, sizes: Mapping[str, int]) -> None:
         for tl in self.timelines.values():
             tl.register_sizes(sizes)
+
+    # -- array encoding (the pool-state representation the vectorized ----
+    # -- Eq. 15 fast path and the compiled pipeline programs consume) ----
+    def to_arrays(
+        self,
+        gids: Mapping[str, int],
+        wids: Sequence[int] | None = None,
+        slots: int | None = None,
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Encode the pool as ``(t, res, reg)`` arrays.
+
+        ``gids`` maps model name -> integer id (every resident name must
+        be covered); ``wids`` fixes the worker-row order (default: sorted
+        ids); ``slots`` the LRU slot count (default ``len(gids)`` — an
+        upper bound, residency never holds duplicates).  Returns
+
+          * ``t``   (W,)   float64 busy-until times,
+          * ``res`` (W, K) int64 resident ids, LRU oldest first, ``-1``
+            padding packed at the tail,
+          * ``reg`` (W, G) float64 registered byte sizes, ``-1`` where a
+            model has no registered size (``WorkerTimeline._touch`` would
+            fall back to the profile's ``memory_bytes``).
+
+        The encoding is lossless given ``gids``: ``from_arrays`` rebuilds
+        an equivalent state (see tests/test_residency_property.py).
+        """
+        ids = list(wids) if wids is not None else [w for w, _ in self.items()]
+        k = slots if slots is not None else max(1, len(gids))
+        t = np.zeros(len(ids), dtype=np.float64)
+        res = np.full((len(ids), k), -1, dtype=np.int64)
+        reg = np.full((len(ids), max(1, len(gids))), -1.0, dtype=np.float64)
+        for row, w in enumerate(ids):
+            tl = self.peek_timeline(w)  # encoding never mutates the pool
+            t[row] = tl.t
+            for j, name in enumerate(tl._resident):
+                res[row, j] = gids[name]
+            for name, size in tl._profiles.items():
+                g = gids.get(name)
+                if g is not None:
+                    reg[row, g] = float(size)
+        return t, res, reg
+
+    @classmethod
+    def from_arrays(
+        cls,
+        t: np.ndarray,
+        res: np.ndarray,
+        reg: np.ndarray,
+        gid_names: Sequence[str],
+        memory_capacity_bytes: int | None = None,
+        wids: Sequence[int] | None = None,
+    ) -> "StreamingState":
+        """Inverse of ``to_arrays``: rebuild the per-worker timelines from
+        the array encoding (``gid_names[g]`` names model id ``g``)."""
+        t = np.asarray(t, dtype=np.float64)
+        ids = list(wids) if wids is not None else list(range(len(t)))
+        out = cls(
+            num_workers=len(ids),
+            now=float(t.min()) if len(t) else 0.0,
+            memory_capacity_bytes=memory_capacity_bytes,
+            worker_ids=ids,
+        )
+        for row, w in enumerate(ids):
+            tl = out.timeline(w)
+            tl.t = float(t[row])
+            tl._resident = [gid_names[int(g)] for g in res[row] if g >= 0]
+            tl._profiles = {
+                gid_names[g]: int(reg[row, g])
+                for g in range(reg.shape[1])
+                if reg[row, g] >= 0
+            }
+        return out
 
     def clone(self) -> "StreamingState":
         """Deep copy for speculative scheduling: mutating the clone's

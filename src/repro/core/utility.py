@@ -88,13 +88,17 @@ def sigmoid_penalty(deadline: ArrayLike, completion: ArrayLike) -> ArrayLike:
         if x <= 0.0:
             return 0.0
         ratio = x / (1.0 - x)
-        return min(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+        # ratio^-3 via multiply/divide only: *, / are correctly-rounded
+        # IEEE ops everywhere (libm pow is not), so the scalar, numpy,
+        # Pallas and XLA penalty implementations agree bit-for-bit.
+        return min(1.0, 1.0 / (1.0 + 1.0 / (ratio * ratio * ratio)))
     d = np.asarray(deadline, np.float64)
     e = np.asarray(completion, np.float64)
     with np.errstate(divide="ignore", invalid="ignore", over="ignore"):
         x = (e - d) / d
         ratio = x / (1.0 - x)
-        inner = np.minimum(1.0, 1.0 / (1.0 + ratio ** (-3.0)))
+        # Multiply/divide-only ratio^-3: bit-identical across backends.
+        inner = np.minimum(1.0, 1.0 / (1.0 + 1.0 / (ratio * ratio * ratio)))
     return np.where(
         e <= d,
         0.0,

@@ -19,6 +19,7 @@ profiled worker; the fusion model slowest & most accurate).
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Sequence
 
 import numpy as np
@@ -32,7 +33,6 @@ from repro.core.dirichlet import (
 )
 from repro.core.sneakpeek import KNNSneakPeek
 from repro.core.types import Application, Request
-import zlib
 
 
 def _stable_hash(name: str) -> int:

@@ -23,7 +23,12 @@ def gamma(penalty: str, d, e):
     if penalty == "sigmoid":
         ratio = x / jnp.where(x < 1.0, 1.0 - x, 1.0)
         safe_ratio = jnp.where(ratio > 0, ratio, 1.0)
-        inner = jnp.minimum(1.0, 1.0 / (1.0 + safe_ratio ** (-3.0)))
+        # Multiply/divide-only ratio^-3: bit-identical to the scalar and
+        # numpy penalty forms in repro.core.utility (pow is not
+        # correctly rounded; *, / are).
+        inner = jnp.minimum(
+            1.0, 1.0 / (1.0 + 1.0 / (safe_ratio * safe_ratio * safe_ratio))
+        )
         return jnp.where(
             e <= d,
             0.0,

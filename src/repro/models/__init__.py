@@ -1,4 +1,4 @@
-from repro.models.model import LM
 from repro.models import attention, blocks, kvcache, layers, moe, rglru, spec, ssd, transformer
+from repro.models.model import LM
 
 __all__ = ["LM", "attention", "blocks", "kvcache", "layers", "moe", "rglru", "spec", "ssd", "transformer"]

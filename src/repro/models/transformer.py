@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.distributed.sharding import shard_act
 from repro.models import blocks
-from repro.models.layers import embed_tokens, logits_from_embed, rmsnorm, rmsnorm_spec, embed_spec
+from repro.models.layers import embed_spec, embed_tokens, logits_from_embed, rmsnorm, rmsnorm_spec
 from repro.models.spec import P, stack
 
 __all__ = ["model_spec", "forward", "prefill", "decode_step", "loss_fn"]

@@ -34,9 +34,27 @@ class ServeStats:
     mean_utility: float = 0.0
     scheduling_overhead_s: float = 0.0
     wall_s: float = 0.0
+    # Per-worker busy seconds (swap + execution) accumulated at commit
+    # time from the streaming state's replay, and the served makespan
+    # (busiest worker's committed busy-until time).
+    worker_busy_s: dict = dataclasses.field(default_factory=dict)
+    span_s: float = 0.0
+
+    @property
+    def worker_utilization(self) -> dict:
+        """Busy-time / wall fraction per worker id over the served span
+        (0.0 for workers that never received work)."""
+        if self.span_s <= 0:
+            return {w: 0.0 for w in sorted(self.worker_busy_s)}
+        return {
+            w: busy / self.span_s
+            for w, busy in sorted(self.worker_busy_s.items())
+        }
 
     def as_dict(self):
-        return dataclasses.asdict(self)
+        out = dataclasses.asdict(self)
+        out["worker_utilization"] = self.worker_utilization
+        return out
 
 
 class EdgeServer:
@@ -58,7 +76,10 @@ class EdgeServer:
         schedules the single worker 0.  ``pipeline`` feeds every window
         through a persistent ``core.pipeline.WindowPipeline`` (fused
         jitted Eq. 9/12 + Eq. 2/13 selection, compiled once and reused
-        across windows); single-worker scheduling only."""
+        across windows) and COMPOSES with ``workers`` — placement then
+        runs through the compiled Eq. 15 program — and with
+        ``memory_capacity_bytes`` (capacity-aware LRU residency inside
+        the compiled selectors)."""
         self.apps = dict(apps)
         self.policy = policy
         self.executor = executor
@@ -79,11 +100,12 @@ class EdgeServer:
         )
         self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
         self._pipeline = None
-        if pipeline and not self.workers:
+        if pipeline:
             from repro.core.pipeline import WindowPipeline
 
             self._pipeline = WindowPipeline(
-                self._eff_apps, sneakpeeks=sneakpeeks, policy=policy
+                self._eff_apps, sneakpeeks=sneakpeeks, policy=policy,
+                workers=self.workers,
             )
 
     def submit(self, request: Request):
@@ -116,6 +138,14 @@ class EdgeServer:
         self._utility_sum += res.utilities.sum()
         self.stats.mean_utility = self._utility_sum / max(self.stats.requests, 1)
         self.stats.scheduling_overhead_s += sched.scheduling_overhead_s
+        # Per-worker utilization, fed from the streaming state at commit:
+        # this window's realized busy seconds plus the pool's committed
+        # busy-until horizon.
+        for w, busy in res.worker_busy_s.items():
+            self.stats.worker_busy_s[w] = self.stats.worker_busy_s.get(w, 0.0) + busy
+        self.stats.span_s = max(
+            self.stats.span_s, max(tl.t for _, tl in self.state.items())
+        )
 
         reports = None
         if self.executor is not None and self.prompt_fn is not None:
@@ -126,10 +156,14 @@ class EdgeServer:
         return {"schedule": sched, "eval": res, "reports": reports}
 
     def run(self, requests, horizon_s: float | None = None):
-        """Feed a request trace through windowed scheduling."""
+        """Feed a request trace through windowed scheduling.
+
+        ``horizon_s=None`` (the default) serves until the last arrival;
+        an explicit horizon — including ``0.0`` — is honored as given.
+        """
         for r in sorted(requests, key=lambda x: x.arrival_s):
             self.submit(r)
-        t_end = horizon_s or max(r.arrival_s for r in requests)
+        t_end = horizon_s if horizon_s is not None else max(r.arrival_s for r in requests)
         n_windows = int(np.ceil(t_end / self.queue.window_s)) or 1
         outs = []
         for w in range(1, n_windows + 1):

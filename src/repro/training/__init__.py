@@ -1,6 +1,6 @@
-from repro.training.optimizer import OptimizerConfig, adamw_step, init_opt_state, learning_rate
 from repro.training import checkpoint
-from repro.training.compression import compressed_psum_tree, init_error_feedback, quantize8, dequantize8
+from repro.training.compression import compressed_psum_tree, dequantize8, init_error_feedback, quantize8
+from repro.training.optimizer import OptimizerConfig, adamw_step, init_opt_state, learning_rate
 from repro.training.trainer import Trainer, TrainerConfig
 
 __all__ = [

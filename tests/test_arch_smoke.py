@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, SHAPES, cell_supported, get_config
+from repro.launch.steps import make_train_step
 from repro.models import LM
 from repro.training.optimizer import OptimizerConfig, init_opt_state
-from repro.launch.steps import make_train_step
 
 ALL_ARCHS = sorted(ARCHS.keys())
 

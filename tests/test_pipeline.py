@@ -2,9 +2,11 @@
 
 The fused jitted programs (Eq. 9/12 + device-side Eq. 2/13 selection — the
 lax.scan selector for the locally-optimal policies, argmax tiles for
-MaxAcc/grouped) must reproduce the numpy fast path and the scalar
-reference decision-for-decision across all five policies, with and
-without SneakPeek posteriors, and under carried streaming state."""
+MaxAcc/grouped, and the Eq. 15 (worker, model) placement scan) must
+reproduce the numpy fast path and the scalar reference
+decision-for-decision across all five policies, with and without SneakPeek
+posteriors, under carried streaming state, over heterogeneous worker
+pools, and with capacity-limited (multi-model LRU) residency."""
 import numpy as np
 import pytest
 
@@ -13,12 +15,21 @@ from repro.core import (
     Simulation,
     StreamingState,
     WindowPipeline,
+    Worker,
     evaluate,
     make_policy,
+    multiworker_schedule,
 )
 from repro.core.pipeline import get_pipeline_backend, set_pipeline_backend
 from repro.core.sneakpeek import attach_sneakpeek
 from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+WORKER_POOLS = [
+    [Worker(0), Worker(1)],
+    [Worker(0), Worker(1, speed=2.0)],
+    [Worker(0, speed=1.5, load_scale=2.0), Worker(1), Worker(2, speed=0.5)],
+    [Worker(3, speed=2.0), Worker(7, load_scale=0.5)],
+]
 
 
 def _window(per_app=6, seed=0, theta="all"):
@@ -118,21 +129,131 @@ def test_pipeline_streaming_state_parity(policy):
     assert _sig(pipe) == _sig(slow)
 
 
-def test_pipeline_capacity_state_falls_back_to_host_path():
-    """Capacity-based (multi-model) residency exceeds the single-slot scan
-    semantics: the pipeline must route through the host fast path and
-    still match the scalar reference."""
+@pytest.mark.parametrize("policy", ["LO-EDF", "LO-Priority", "SneakPeek"])
+@pytest.mark.parametrize("cap", [512 * 2**20, 256 * 2**20, 1])
+def test_pipeline_capacity_state_compiled_parity(policy, cap, monkeypatch):
+    """Capacity-based (multi-model LRU) residency runs INSIDE the compiled
+    selectors — no host fast-path fallback — and still matches the scalar
+    reference decision-for-decision."""
+    from repro.core.pipeline import WindowPipeline as WP
+
+    monkeypatch.setattr(
+        WP, "_schedule_numpy",
+        lambda *a, **k: pytest.fail("capacity state fell back to the host path"),
+    )
     reqs, apps, _ = _window(per_app=5, seed=4, theta="all")
-    cap = 512 * 2**20
     st_p = StreamingState(memory_capacity_bytes=cap)
     st_s = StreamingState(memory_capacity_bytes=cap)
     for st in (st_p, st_s):
-        warm = make_policy("LO-EDF").schedule(reqs, apps, 0.1, state=st)
+        warm = make_policy(policy).schedule(reqs, apps, 0.1, state=st)
         evaluate(warm, apps, 0.1, state=st)
     reqs2, _, _ = _window(per_app=5, seed=5, theta="all")
-    pipe = make_policy("LO-EDF", pipeline=True).schedule(reqs2, apps, 0.2, state=st_p)
-    slow = make_policy("LO-EDF", fastpath=False).schedule(reqs2, apps, 0.2, state=st_s)
+    pipe = make_policy(policy, pipeline=True).schedule(reqs2, apps, 0.2, state=st_p)
+    slow = make_policy(policy, fastpath=False).schedule(reqs2, apps, 0.2, state=st_s)
     assert _sig(pipe) == _sig(slow)
+
+
+# ------------------------------------------------------- multiworker (Eq. 15)
+
+
+@pytest.mark.parametrize("pool", range(len(WORKER_POOLS)))
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_pipeline_multiworker_parity(pool, policy):
+    """Tentpole: the compiled Eq. 15 placement program == the numpy fast
+    path == the scalar reference across heterogeneous pools, grouped and
+    per-request variants."""
+    workers = WORKER_POOLS[pool]
+    pol = make_policy(policy)
+    kw = dict(
+        data_aware=pol.data_aware,
+        split_by_label=pol.split_by_label,
+        per_request=not pol.grouped,
+    )
+    for seed in range(2):
+        reqs, apps, _ = _window(per_app=5, seed=seed, theta="some")
+        wp = WindowPipeline(apps, policy=make_policy(policy, pipeline=True), workers=workers)
+        pipe = wp.schedule(reqs, 0.1)
+        fast = multiworker_schedule(reqs, apps, workers, 0.1, fastpath=True, **kw)
+        slow = multiworker_schedule(reqs, apps, workers, 0.1, fastpath=False, **kw)
+        assert _sig(pipe) == _sig(fast) == _sig(slow)
+        rp = evaluate(pipe, apps, 0.1, acc_mode="oracle")
+        rs = evaluate(slow, apps, 0.1, acc_mode="oracle")
+        np.testing.assert_allclose(rp.utilities, rs.utilities, atol=1e-9, rtol=0)
+        np.testing.assert_allclose(rp.completions, rs.completions, atol=1e-9, rtol=0)
+
+
+@pytest.mark.parametrize("cap", [None, 256 * 2**20, 1])
+@pytest.mark.parametrize("policy", ["SneakPeek", "LO-Priority"])
+def test_pipeline_multiworker_carried_state_parity(cap, policy):
+    """Eq. 15 placement parity must survive a carried StreamingState —
+    including capacity-limited residency (the compiled LRU slots see the
+    same residency the host timelines do) — and scheduling never commits."""
+    workers = WORKER_POOLS[2]
+    pol = make_policy(policy)
+    kw = dict(
+        data_aware=pol.data_aware,
+        split_by_label=pol.split_by_label,
+        per_request=not pol.grouped,
+    )
+    states = [
+        StreamingState(worker_ids=[w.wid for w in workers], memory_capacity_bytes=cap)
+        for _ in range(3)
+    ]
+    reqs, apps, _ = _window(per_app=5, seed=0, theta="all")
+    for st in states:
+        warm = multiworker_schedule(reqs, apps, workers, 0.1, state=st, **kw)
+        evaluate(warm, apps, 0.1, state=st)
+    reqs2, _, _ = _window(per_app=5, seed=1, theta="all")
+    wp = WindowPipeline(apps, policy=make_policy(policy, pipeline=True), workers=workers)
+    pipe = wp.schedule(reqs2, 0.2, state=states[0])
+    fast = multiworker_schedule(reqs2, apps, workers, 0.2, state=states[1], **kw)
+    slow = multiworker_schedule(
+        reqs2, apps, workers, 0.2, state=states[2], fastpath=False, **kw
+    )
+    assert _sig(pipe) == _sig(fast) == _sig(slow)
+    # Scheduling only PEEKS: all three states are still bit-identical.
+    for a, b in zip(states[0].timelines.values(), states[1].timelines.values()):
+        assert a.t == b.t and list(a._resident) == list(b._resident)
+
+
+def test_multiworker_peek_does_not_grow_state():
+    """Scheduling is a pure peek: no scheduler path — scalar loop, numpy
+    fast path, or compiled pipeline — may insert timelines for pool
+    workers the carried state does not track yet."""
+    workers = WORKER_POOLS[1]  # wids 0, 1
+    reqs, apps, _ = _window(per_app=4, seed=0, theta="all")
+    state = StreamingState(worker_ids=[1])  # tracks worker 1 only
+    before = set(state.timelines)
+    multiworker_schedule(reqs, apps, workers, 0.1, state=state)
+    multiworker_schedule(reqs, apps, workers, 0.1, state=state, fastpath=False)
+    wp = WindowPipeline(apps, policy=make_policy("SneakPeek", pipeline=True),
+                        workers=workers)
+    wp.schedule(reqs, 0.1, state=state)
+    # Single-worker paths peeking worker 0 must not insert it either.
+    for pol in ("LO-EDF", "SneakPeek"):
+        make_policy(pol).schedule(reqs, apps, 0.1, state=state)
+        make_policy(pol, fastpath=False).schedule(reqs, apps, 0.1, state=state)
+        make_policy(pol, pipeline=True).schedule(reqs, apps, 0.1, state=state)
+    assert set(state.timelines) == before
+
+
+def test_pipeline_multiworker_numpy_backend_delegates():
+    """The numpy pipeline backend routes Eq. 15 windows through the
+    decision-identical numpy fast path."""
+    workers = WORKER_POOLS[1]
+    reqs, apps, _ = _window(per_app=4, seed=6, theta="all")
+    set_pipeline_backend("numpy")
+    try:
+        wp = WindowPipeline(
+            apps, policy=make_policy("SneakPeek", pipeline=True), workers=workers
+        )
+        pipe = wp.schedule(reqs, 0.1)
+    finally:
+        set_pipeline_backend("auto")
+    fast = multiworker_schedule(
+        reqs, apps, workers, 0.1, data_aware=True, split_by_label=True
+    )
+    assert _sig(pipe) == _sig(fast)
 
 
 # ---------------------------------------------------------------- backends
@@ -201,5 +322,35 @@ def test_simulation_pipeline_matches_fast_path():
         pipe = Simulation(
             make_policy(policy, pipeline=True), apps, sneakpeeks=sneaks, seed=11,
             pipeline=True,
+        ).run(list(reqs))
+        assert base == pipe, policy
+
+
+@pytest.mark.parametrize("cap", [None, 256 * 2**20])
+def test_simulation_multiworker_pipeline_matches_fast_path(cap):
+    """Streaming over a heterogeneous pool: Simulation(pipeline=True,
+    workers=...) — the compiled Eq. 15 program with carried per-worker
+    state and (optionally) capacity-limited residency — realizes the same
+    metrics as the numpy multi-worker fast path, window for window."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    workers = [Worker(0), Worker(1, speed=2.0)]
+    reqs, rid = [], 0
+    for w in range(4):
+        batch = make_requests(
+            list(APP_SPECS.values()), per_app=4, seed=w, start_rid=rid
+        )
+        for r in batch:
+            r.arrival_s += w * 0.1
+            r.deadline_s += w * 0.1
+        rid += len(batch)
+        reqs.extend(batch)
+    for policy in ("LO-Priority", "SneakPeek"):
+        base = Simulation(
+            make_policy(policy), apps, sneakpeeks=sneaks, seed=11,
+            workers=workers, memory_capacity_bytes=cap,
+        ).run(list(reqs))
+        pipe = Simulation(
+            make_policy(policy, pipeline=True), apps, sneakpeeks=sneaks, seed=11,
+            workers=workers, memory_capacity_bytes=cap, pipeline=True,
         ).run(list(reqs))
         assert base == pipe, policy

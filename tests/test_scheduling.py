@@ -15,8 +15,8 @@ from repro.core import (
     ScheduleEntry,
     Worker,
     evaluate,
-    grouped_schedule,
     group_by_app,
+    grouped_schedule,
     make_policy,
     multiworker_schedule,
     run_window,

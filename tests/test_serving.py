@@ -176,6 +176,68 @@ def test_edge_server_multiworker_placement():
     assert set(srv.state.timelines) == {0, 1}
 
 
+def test_edge_server_pipeline_composes_with_workers():
+    """Regression: ``EdgeServer(pipeline=True, workers=...)`` used to
+    silently drop the pipeline; it now routes windows through the
+    compiled Eq. 15 placement with identical realized stats."""
+    from repro.core import Worker
+
+    pytest.importorskip("jax")
+    apps, _ = build_benchmark_suite(backend="numpy")
+    workers = [Worker(0), Worker(1, speed=2.0)]
+    reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=2)
+    base = EdgeServer(apps, make_policy("Grouped"), workers=workers)
+    pipe = EdgeServer(apps, make_policy("Grouped", pipeline=True),
+                      workers=workers, pipeline=True)
+    assert pipe._pipeline is not None and pipe._pipeline.workers == workers
+    outs_b, stats_b = base.run(list(reqs))
+    outs_p, stats_p = pipe.run(list(reqs))
+    sig_b = [(e.request.rid, e.model, e.order, e.worker)
+             for o in outs_b for e in o["schedule"].sorted_entries()]
+    sig_p = [(e.request.rid, e.model, e.order, e.worker)
+             for o in outs_p for e in o["schedule"].sorted_entries()]
+    assert sig_b == sig_p
+    assert stats_b.violations == stats_p.violations
+    np.testing.assert_allclose(stats_b.mean_utility, stats_p.mean_utility, atol=1e-12)
+
+
+def test_edge_server_run_honors_zero_horizon():
+    """Regression: an explicit ``horizon_s=0.0`` must not be treated as
+    unset (the old ``horizon_s or max(...)`` truthiness bug) — it serves
+    exactly one window instead of the whole trace span."""
+    apps, _ = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=2, seed=0)
+    for r in reqs:
+        r.arrival_s += 0.35  # arrivals well past the first window
+    srv0 = EdgeServer(apps, make_policy("LO-EDF"))
+    _, stats0 = srv0.run(list(reqs), horizon_s=0.0)
+    assert stats0.windows == 0  # one window at 0.1: nothing arrived yet
+    srv = EdgeServer(apps, make_policy("LO-EDF"))
+    _, stats = srv.run(list(reqs))  # default: serve to the last arrival
+    assert stats.requests == len(reqs)
+
+
+def test_serve_stats_per_worker_utilization():
+    """Satellite: ServeStats reports busy/wall per worker id, fed from the
+    streaming state at commit; idle pool members report 0.0."""
+    from repro.core import Worker
+
+    apps, _ = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=3)
+    srv = EdgeServer(apps, make_policy("Grouped"),
+                     workers=[Worker(0), Worker(1, speed=2.0)])
+    _, stats = srv.run(list(reqs))
+    util = stats.worker_utilization
+    assert set(util) == {0, 1}
+    assert stats.span_s > 0
+    busy_total = sum(stats.worker_busy_s.values())
+    assert busy_total > 0
+    for w, u in util.items():
+        assert 0.0 <= u <= 1.0 + 1e-9
+        np.testing.assert_allclose(u, stats.worker_busy_s[w] / stats.span_s)
+    assert "worker_utilization" in stats.as_dict()
+
+
 def test_lm_profiles_fallback_latency_model():
     """Without dry-run artifacts, analytic latencies are produced and sane."""
     fixed, per_item = lm_latency_model("/nonexistent", "tinyllama-1.1b")
