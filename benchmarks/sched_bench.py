@@ -32,10 +32,10 @@ per-request, with one persistent ``WindowPipeline`` per cell so the
 compiled program is reused across timed windows.  Gate: every cell at
 1024 requests x 2 workers must at least match the numpy fast path.
 
-Writes ``BENCH_sched.json`` at the repo root (plus a copy under
-results/benchmarks/) and prints a table.  Acceptance gates: the
-SneakPeek x 1024-request cell must exceed 5x, and the 2-worker x
-1024-request multi-worker cell must exceed 3x.
+Writes ``results/benchmarks/BENCH_sched.json`` (the single committed
+benchmark artifact) and prints a table.  Acceptance gates: the SneakPeek
+x 1024-request cell must exceed 5x, and the 2-worker x 1024-request
+multi-worker cell must exceed 3x.
 """
 from __future__ import annotations
 
@@ -350,7 +350,10 @@ def main():
     ap.add_argument("--pipeline", action="store_true",
                     help="benchmark the fused jitted window pipeline section")
     ap.add_argument("--pipeline-policies", type=str, default="LO-EDF,LO-Priority,SneakPeek")
-    ap.add_argument("--out", type=str, default=str(ROOT / "BENCH_sched.json"))
+    ap.add_argument(
+        "--out", type=str,
+        default=str(ROOT / "results" / "benchmarks" / "BENCH_sched.json"),
+    )
     args = ap.parse_args()
 
     sizes = (
@@ -432,13 +435,8 @@ def main():
         ),
     }
     out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(payload, indent=2, default=float))
-    if out == ROOT / "BENCH_sched.json":
-        # Mirror only the canonical root artifact: ad-hoc --out runs must
-        # not overwrite the committed results copy with partial sweeps.
-        copy = ROOT / "results" / "benchmarks" / "BENCH_sched.json"
-        copy.parent.mkdir(parents=True, exist_ok=True)
-        copy.write_text(out.read_text())
     print(f"\nwrote {out}")
     failed = False
     # Parity: every implementation pair must deliver the same mean utility

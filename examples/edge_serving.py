@@ -11,12 +11,18 @@ classification-style requests flows through:
 with the executor actually running prefill+decode per scheduled batch
 and the swap manager accounting weight-residency.
 
+A second section runs the same application on a heterogeneous 2-worker
+pool: Eq. 15 placement splits each window across workers and the
+``ExecutorPool`` execution plane runs each worker's share on its own
+lane (own swap manager, speed-scaled accounting), feeding per-worker
+swap counts and busy time into ``ServeStats``.
+
     PYTHONPATH=src python examples/edge_serving.py
 """
 import numpy as np
 
 from repro.configs import ARCHS
-from repro.core import Application, ModelProfile, Request, make_policy
+from repro.core import Application, ModelProfile, Request, Worker, make_policy
 from repro.serving import EdgeServer, LMExecutor
 
 RNG = np.random.default_rng(0)
@@ -40,7 +46,9 @@ def main():
     vocab = variants["mamba2-130m"][0].vocab_size
 
     def prompt_fn(req):
-        return RNG.integers(0, vocab, 12).astype(np.int32)
+        # Seeded per request: the executor-pool lanes call this from
+        # multiple threads, so no shared generator state is mutated.
+        return np.random.default_rng(req.rid).integers(0, vocab, 12).astype(np.int32)
 
     server = EdgeServer(
         {"assistant": app}, make_policy("Grouped"), executor=executor, prompt_fn=prompt_fn
@@ -61,6 +69,31 @@ def main():
             print(f"  batch[{rep.model:16s}] size={rep.batch_size} "
                   f"swap={rep.swap_s*1e3:6.1f}ms prefill={rep.prefill_s*1e3:6.1f}ms "
                   f"decode={rep.decode_s*1e3:6.1f}ms tokens={rep.tokens.shape}")
+
+    print("\nmulti-worker pool: Eq. 15 placement + per-worker execution lanes")
+    pool_srv = EdgeServer(
+        {"assistant": app}, make_policy("LO-EDF"),
+        executor=LMExecutor(variants, new_tokens=3), prompt_fn=prompt_fn,
+        workers=[Worker(0), Worker(1, speed=2.0)],
+    )
+    reqs = [
+        Request(rid=100 + i, app="assistant", arrival_s=0.01 * i,
+                deadline_s=0.01 * i + RNG.choice([0.08, 0.2, 0.5]),
+                true_label=int(RNG.integers(2)))
+        for i in range(12)
+    ]
+    outs, stats = pool_srv.run(reqs)
+    print(f"windows: {stats.windows}  requests: {stats.requests}  "
+          f"mean utility {stats.mean_utility:.3f}")
+    for w in sorted(stats.worker_swaps):
+        print(f"  worker {w}: swaps={stats.worker_swaps[w]} "
+              f"busy={stats.pool_busy_s[w]*1e3:7.1f}ms "
+              f"(speed x{pool_srv.pool.lanes[w].worker.speed:g})")
+    placed = {}
+    for o in outs:
+        for e in o["schedule"].entries:
+            placed[e.worker] = placed.get(e.worker, 0) + 1
+    print(f"  placement: {dict(sorted(placed.items()))} requests per worker")
 
 
 if __name__ == "__main__":

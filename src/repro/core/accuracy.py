@@ -72,6 +72,7 @@ class ModelProfile:
 
     @property
     def num_classes(self) -> int:
+        """Number of classes |C| (length of the recall vector)."""
         return int(self.recalls.shape[0])
 
     def profiled_accuracy(self, test_theta: np.ndarray | None = None) -> float:

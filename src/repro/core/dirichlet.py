@@ -53,10 +53,12 @@ class DirichletPrior:
 
     @property
     def num_classes(self) -> int:
+        """Number of classes |C| (length of the concentration vector)."""
         return int(self.alpha.shape[0])
 
     @property
     def mean(self) -> np.ndarray:
+        """E[theta] = alpha / sum(alpha)."""
         return self.alpha / self.alpha.sum()
 
 

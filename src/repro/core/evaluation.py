@@ -86,6 +86,7 @@ class WorkerTimeline:
         return swap
 
     def register_sizes(self, sizes: Mapping[str, int]) -> None:
+        """Override model byte sizes used for capacity eviction."""
         self._profiles = dict(sizes)
 
     def clone(self) -> "WorkerTimeline":
@@ -145,6 +146,8 @@ def estimate_accuracy(
 
 @dataclasses.dataclass
 class EvalResult:
+    """Scored replay of one schedule (Eq. 3 terms + realized timing)."""
+
     mean_utility: float
     utilities: np.ndarray
     completions: np.ndarray
@@ -160,6 +163,7 @@ class EvalResult:
 
     @property
     def violation_rate(self) -> float:
+        """Fraction of scheduled requests that missed their deadline."""
         return self.violations / max(1, len(self.utilities))
 
     @property
@@ -192,7 +196,12 @@ def evaluate(
     persistent per-worker timelines instead of fresh ones: batches start
     after each worker's carried backlog, resident models are not
     re-charged their swap, and the realized executions are COMMITTED to
-    the state (residency + busy-until carry to the next window).  The
+    the state (residency + busy-until carry to the next window).  Each
+    committed batch is also logged to the state's preemption backlog
+    (``StreamingState.record_batch`` with a pre-batch rollback snapshot)
+    so the serving loop's ``preempt=True`` mode can withdraw and
+    re-schedule committed-but-unstarted work at the next window close
+    with its utility re-accounted there.  The
     state OWNS the pool: its existing timelines all count toward
     utilization, ``num_workers`` is ignored, and residency capacity must
     be configured on the StreamingState, not here.
@@ -243,8 +252,25 @@ def evaluate(
             )
             busy.setdefault(w, 0.0)
         profile = apps[batch[0].request.app].model(batch[0].model)
-        start, completion = workers[w].run_batch(profile, len(batch))
+        tl = workers[w]
+        # Pre-batch snapshot for the streaming backlog log: window-close
+        # preemption rolls the timeline back to exactly this point when
+        # the batch is withdrawn before starting (streaming.preempt).
+        t_before = tl.t
+        residency_before = list(tl._resident) if state is not None else ()
+        start, completion = tl.run_batch(profile, len(batch))
         busy[w] += completion - start
+        if state is not None:
+            state.record_batch(
+                w,
+                [e.request for e in batch],
+                batch[0].model,
+                batch[0].batch_id,
+                start,
+                completion - start,
+                t_before,
+                residency_before,
+            )
         for e in batch:
             e.est_start_s = start
             e.est_latency_s = completion - start

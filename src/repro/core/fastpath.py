@@ -67,6 +67,7 @@ def set_utility_backend(name: str) -> None:
 
 
 def get_utility_backend() -> str:
+    """Current Eq. 2 batched-utility backend ("numpy" or "pallas")."""
     return _UTILITY_BACKEND
 
 
@@ -148,6 +149,7 @@ class AppArrays:
 
     @classmethod
     def build(cls, app: Application) -> "AppArrays":
+        """Precompute one application's model tables (memoized per app)."""
         models = app.models
         R = np.stack([m.recalls for m in models])
         lat_s = np.array([m.latency_s for m in models])

@@ -35,6 +35,7 @@ class Worker:
     load_scale: float = 1.0
 
     def scaled(self, profile: ModelProfile) -> ModelProfile:
+        """This worker's view of a profile: latency / speed, swap * load_scale."""
         if self.speed == 1.0 and self.load_scale == 1.0:
             return profile
         lm = profile.latency_model
@@ -101,11 +102,11 @@ def multiworker_schedule(
         if split_by_label:
             groups = split_groups_by_label(groups, apps)
 
-    def gp(item):
+    def _gp(item):
         key, members = item
         return (-group_priority(members, apps[members[0].app], now, data_aware), key)
 
-    ordered_groups = sorted(groups.items(), key=gp)
+    ordered_groups = sorted(groups.items(), key=_gp)
     timelines: dict[int, WorkerTimeline] = {}
     for w in workers:
         if state is not None:

@@ -102,6 +102,7 @@ def set_pipeline_backend(name: str) -> None:
 
 
 def get_pipeline_backend() -> str:
+    """Current pipeline backend setting ("numpy", "jax" or "auto")."""
     return _PIPELINE_BACKEND
 
 
@@ -436,6 +437,7 @@ class WindowPipeline:
         self.workers = list(workers) if workers else None
 
     def resolved_backend(self) -> str:
+        """The backend this pipeline will actually run ("jax" or "numpy")."""
         b = self.backend or _PIPELINE_BACKEND
         if b == "auto":
             b = "jax" if _have_jax() else "numpy"
@@ -462,6 +464,10 @@ class WindowPipeline:
         arrays: WindowArrays | None = None,
         workers=None,
     ) -> Schedule:
+        """Schedule one window through the compiled programs (decision-
+        identical to the numpy fast path; falls back to it on the numpy
+        backend).  ``state`` seeds carried backlog/residency; ``workers``
+        routes through the compiled Eq. 15 placement program."""
         policy = policy if policy is not None else self.policy
         if policy is None:
             raise ValueError("WindowPipeline needs a policy (init arg or call arg)")

@@ -217,6 +217,15 @@ def schedule_window(
     ``state`` carries streaming backlog + residency; ``arrays`` a
     precomputed ``fastpath.WindowArrays``.  Returns the schedule and the
     (possibly short-circuit-augmented) application map.
+
+    Re-admission (window-close preemption): requests withdrawn by
+    ``StreamingState.preempt`` and merged back through
+    ``WindowQueue.readmit`` flow through here like any other window
+    member — they already carry their SneakPeek posterior, and
+    ``attach_sneakpeek`` skips evidence-bearing requests, so the
+    re-scheduling decision uses the original draw under the NEW window's
+    deadlines and pool state (fresh Eq. 12 priorities, fresh Eq. 15
+    placement).
     """
     from repro.core.sneakpeek import attach_sneakpeek
 

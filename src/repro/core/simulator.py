@@ -34,12 +34,15 @@ __all__ = ["WindowResult", "run_window", "Simulation"]
 
 @dataclasses.dataclass
 class WindowResult:
+    """One scheduled + oracle-scored window (``run_window`` output)."""
+
     schedule: Schedule
     result: EvalResult
     overhead_s: float
 
     @property
     def mean_utility(self) -> float:
+        """Mean oracle utility of the window (Eq. 3 objective)."""
         return self.result.mean_utility
 
 

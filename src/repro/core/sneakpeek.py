@@ -47,6 +47,7 @@ class SneakPeekModel:
     name: str = "sneakpeek"
 
     def evidence(self, features: np.ndarray, true_label: int | None = None) -> np.ndarray:
+        """Multinomial evidence counts y for one request (Eq. 11 input)."""
         raise NotImplementedError
 
     def evidence_batch(
@@ -150,14 +151,17 @@ class KNNSneakPeek(SneakPeekModel):
         return votes
 
     def evidence(self, features: np.ndarray, true_label: int | None = None) -> np.ndarray:
+        """k-NN vote counts for one request's features."""
         return self._votes(features)[0]
 
     def evidence_batch(
         self, features: np.ndarray, true_labels: Sequence[int | None] | None = None
     ) -> np.ndarray:
+        """One batched k-NN vote tile for the whole window."""
         return self._votes(features)
 
     def measured_recalls(self) -> np.ndarray:
+        """Held-out per-class recall of the k-NN majority vote (cached)."""
         if self._recalls_cache is None:
             votes = self._votes(self._hold_x)
             preds = votes.argmax(axis=1)
@@ -183,12 +187,14 @@ class DecisionRuleSneakPeek(SneakPeekModel):
         self.name = name or f"{base.name}:decision_rule"
 
     def evidence(self, features: np.ndarray, true_label: int | None = None) -> np.ndarray:
+        """One-hot evidence: full weight on the base model's prediction."""
         pred = self.base.predict(features, true_label)
         y = np.zeros(self.num_classes)
         y[pred] = self.weight
         return y
 
     def measured_recalls(self) -> np.ndarray:
+        """Recalls of the underlying base model (the rule adds no skill)."""
         return self.base.measured_recalls()
 
 
@@ -217,6 +223,7 @@ class ConfusionSneakPeek(SneakPeekModel):
         self._rows = z / z.sum(axis=1, keepdims=True)
 
     def evidence(self, features: np.ndarray, true_label: int | None = None) -> np.ndarray:
+        """k votes drawn from the true label's confusion-matrix row."""
         if true_label is None:
             raise ValueError("ConfusionSneakPeek requires the true label")
         return self.rng.multinomial(self.k, self._rows[true_label]).astype(np.float64)
@@ -237,6 +244,7 @@ class ConfusionSneakPeek(SneakPeekModel):
         return self.rng.multinomial(self.k, self._rows[labels]).astype(np.float64)
 
     def measured_recalls(self) -> np.ndarray:
+        """Per-class recall of the synthetic confusion matrix."""
         return recalls_from_confusion(self._rows)
 
 
@@ -255,11 +263,15 @@ def ingest_window(
     (Eq. 11), preserving within-app request order so stochastic evidence
     models draw exactly as the per-request loop would.  Requests of
     applications without a SneakPeek model are left untouched (they fall
-    back to profiled accuracy).
+    back to profiled accuracy).  Requests that already carry evidence are
+    left untouched: the SneakPeek draw happens ONCE per request, so a
+    request re-admitted to a later window after preemption keeps the
+    posterior attached at first ingest instead of redrawing (stochastic
+    evidence models would otherwise fork the stream).
     """
     by_app: dict[str, list[int]] = {}
     for i, r in enumerate(requests):
-        if sneakpeeks.get(r.app) is not None:
+        if r.evidence is None and sneakpeeks.get(r.app) is not None:
             by_app.setdefault(r.app, []).append(i)
     for app_name, idxs in by_app.items():
         sp = sneakpeeks[app_name]

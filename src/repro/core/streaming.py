@@ -19,16 +19,72 @@ is threaded through ``Simulation``, ``evaluate`` and the serving loop:
 schedulers *peek* it (via ``clone()``d timelines, so speculative placement
 never mutates it) and ``evaluate(..., state=...)`` *commits* realized
 executions to it.
+
+A third piece of state supports **window-close preemption** (the serving
+loop's ``preempt=True`` mode): the per-worker *backlog log* of committed
+batches that have not finished yet (``BacklogBatch``).  Each record
+carries a *dispatch mark* — set by the executor pool when the batch
+actually begins running — distinguishing *started* work (never
+withdrawn) from work the scheduler merely committed speculatively.
+``preempt(now)`` withdraws the committed-but-unstarted tail of each
+worker's backlog, rolling the timeline (busy-until time AND LRU
+residency) back to the snapshot taken before the first withdrawn batch,
+so the withdrawn requests can be merged into the next window's queue and
+re-scheduled under fresh posteriors.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Iterator, Mapping, Sequence
 
 import numpy as np
 
 from repro.core.evaluation import WorkerTimeline
+from repro.core.types import Request
 
-__all__ = ["StreamingState"]
+__all__ = ["BacklogBatch", "StreamingState"]
+
+# Tolerance for "has this batch started by ``now``" comparisons: window
+# closes land exactly on batch start times (a batch committed to start at
+# the close instant has NOT started yet and is withdrawable).
+_START_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class BacklogBatch:
+    """One committed batch execution a worker has not finished yet.
+
+    Records everything preemption needs: the member requests (so a
+    withdrawn batch can be re-admitted), the timing the evaluator
+    committed, the *pre-batch* timeline snapshot (busy-until time and LRU
+    residency, for exact rollback), and the dispatch mark set by the
+    executor pool when the batch physically starts.
+    """
+
+    requests: list[Request]
+    model: str
+    batch_id: int
+    est_start_s: float
+    est_latency_s: float
+    t_before: float
+    residency_before: list[str]
+    dispatched: bool = False
+
+    @property
+    def est_completion_s(self) -> float:
+        """Committed completion time of the batch."""
+        return self.est_start_s + self.est_latency_s
+
+    @property
+    def rids(self) -> list[int]:
+        """Member request ids, schedule order."""
+        return [r.rid for r in self.requests]
+
+    def started(self, now: float) -> bool:
+        """Whether the batch is beyond withdrawal at time ``now``: either
+        physically dispatched by the executor pool or already started in
+        committed (simulated) time."""
+        return self.dispatched or self.est_start_s < now - _START_EPS
 
 
 class StreamingState:
@@ -52,9 +108,13 @@ class StreamingState:
         self.timelines: dict[int, WorkerTimeline] = {
             w: WorkerTimeline(now, memory_capacity_bytes) for w in ids
         }
+        # Per-worker committed-but-unfinished batches, commit order
+        # (est_start_s nondecreasing per worker — execution is sequential).
+        self.backlog: dict[int, list[BacklogBatch]] = {w: [] for w in ids}
 
     @property
     def num_workers(self) -> int:
+        """Number of workers in the carried pool."""
         return len(self.timelines)
 
     def timeline(self, wid: int) -> WorkerTimeline:
@@ -75,10 +135,98 @@ class StreamingState:
 
     def advance(self, now: float) -> None:
         """Move the clock: idle workers become ready at ``now``; busy
-        workers keep their backlog (their next batch starts later)."""
+        workers keep their backlog (their next batch starts later).
+        Backlog records whose committed completion has passed are pruned
+        (finished work can never be withdrawn)."""
         self._now = max(self._now, float(now))
         for tl in self.timelines.values():
             tl.advance(now)
+        for w, batches in self.backlog.items():
+            if batches:
+                self.backlog[w] = [
+                    b for b in batches if b.est_completion_s > self._now
+                ]
+
+    # -- backlog log (window-close preemption substrate) -----------------
+    def record_batch(
+        self,
+        wid: int,
+        requests: Sequence[Request],
+        model: str,
+        batch_id: int,
+        est_start_s: float,
+        est_latency_s: float,
+        t_before: float,
+        residency_before: Sequence[str],
+    ) -> None:
+        """Log one committed batch execution on worker ``wid`` (called by
+        ``evaluate(..., state=...)`` as it replays the schedule).  The
+        pre-batch timeline snapshot makes later withdrawal exact."""
+        self.backlog.setdefault(wid, []).append(
+            BacklogBatch(
+                requests=list(requests),
+                model=model,
+                batch_id=batch_id,
+                est_start_s=float(est_start_s),
+                est_latency_s=float(est_latency_s),
+                t_before=float(t_before),
+                residency_before=list(residency_before),
+            )
+        )
+
+    def mark_dispatched(self, rids: Sequence[int]) -> None:
+        """Set the dispatch mark on every backlog batch containing one of
+        ``rids`` — the executor pool calls this as a batch begins running,
+        making it immune to withdrawal."""
+        wanted = set(rids)
+        for batches in self.backlog.values():
+            for b in batches:
+                if not b.dispatched and wanted.intersection(b.rids):
+                    b.dispatched = True
+
+    def backlog_requests(self) -> list[Request]:
+        """All requests currently committed but unfinished, any worker."""
+        return [r for bs in self.backlog.values() for b in bs for r in b.requests]
+
+    def undispatched_backlog(self) -> int:
+        """Number of backlog batches no executor lane has dispatched yet —
+        the work a preemptive server must keep closing windows for."""
+        return sum(1 for bs in self.backlog.values() for b in bs if not b.dispatched)
+
+    def preempt(self, now: float) -> tuple[list[Request], list[Request]]:
+        """Withdraw committed-but-unstarted work at window close ``now``.
+
+        Per worker, the maximal contiguous *tail* of backlog batches that
+        are neither dispatched nor started in committed time
+        (``est_start_s >= now``) is withdrawn; the timeline rolls back to
+        the busy-until time and LRU residency snapshot taken before the
+        earliest withdrawn batch (exact, because execution is sequential:
+        unstarted batches are always a tail).  Started or dispatched
+        batches are NEVER withdrawn.
+
+        Returns ``(readmit, expired)``: withdrawn requests whose deadline
+        is still ahead of ``now`` (to merge into the next window's queue)
+        and those already past it (to drop with a recorded violation),
+        each sorted by ``(arrival_s, rid)``.
+        """
+        now = float(now)
+        readmit: list[Request] = []
+        expired: list[Request] = []
+        for wid, batches in self.backlog.items():
+            tl = self.timelines.get(wid)
+            while batches and not batches[-1].started(now):
+                b = batches.pop()
+                for r in b.requests:
+                    (expired if r.deadline_s <= now else readmit).append(r)
+                if tl is not None:
+                    # Popping tail-first means the LAST restore applied is
+                    # the earliest withdrawn batch's snapshot — exact.
+                    tl.t = b.t_before
+                    tl._resident = list(b.residency_before)
+        return (
+            sorted(readmit, key=lambda r: (r.arrival_s, r.rid)),
+            sorted(expired, key=lambda r: (r.arrival_s, r.rid)),
+        )
 
     def backlog_s(self, now: float) -> float:
         """Worst-case carried backlog: how far the busiest worker's
@@ -90,6 +238,7 @@ class StreamingState:
         return {w: list(tl._resident) for w, tl in self.timelines.items()}
 
     def register_sizes(self, sizes: Mapping[str, int]) -> None:
+        """Propagate model byte sizes to every worker timeline."""
         for tl in self.timelines.values():
             tl.register_sizes(sizes)
 
@@ -100,7 +249,8 @@ class StreamingState:
         gids: Mapping[str, int],
         wids: Sequence[int] | None = None,
         slots: int | None = None,
-    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        include_backlog: bool = False,
+    ) -> tuple:
         """Encode the pool as ``(t, res, reg)`` arrays.
 
         ``gids`` maps model name -> integer id (every resident name must
@@ -115,8 +265,14 @@ class StreamingState:
             model has no registered size (``WorkerTimeline._touch`` would
             fall back to the profile's ``memory_bytes``).
 
+        ``include_backlog=True`` appends a fourth element: the backlog-log
+        encoding built by ``backlog_to_arrays`` (dispatch marks included),
+        for consumers that must round-trip the FULL preemption state, not
+        just the pool the compiled programs read.
+
         The encoding is lossless given ``gids``: ``from_arrays`` rebuilds
-        an equivalent state (see tests/test_residency_property.py).
+        an equivalent state (see tests/test_residency_property.py and
+        tests/test_preemption.py).
         """
         ids = list(wids) if wids is not None else [w for w, _ in self.items()]
         k = slots if slots is not None else max(1, len(gids))
@@ -132,7 +288,85 @@ class StreamingState:
                 g = gids.get(name)
                 if g is not None:
                     reg[row, g] = float(size)
+        if include_backlog:
+            return t, res, reg, self.backlog_to_arrays(gids, wids=ids, slots=k)
         return t, res, reg
+
+    def backlog_to_arrays(
+        self,
+        gids: Mapping[str, int],
+        wids: Sequence[int] | None = None,
+        slots: int | None = None,
+    ) -> dict[str, np.ndarray]:
+        """Array encoding of the backlog log (one row per committed batch).
+
+        Numeric fields — worker id, model id, batch id, committed timing,
+        rollback snapshot, dispatch mark — are plain arrays; the member
+        ``Request`` objects ride in an object array (``members``, indexed
+        by ``offsets``): they are host-side re-admission payload, never
+        consumed by the compiled programs.  ``backlog_from_arrays`` (and
+        ``from_arrays(..., backlog=...)``) inverts this losslessly,
+        dispatch marks included.
+        """
+        ids = list(wids) if wids is not None else [w for w, _ in self.items()]
+        k = slots if slots is not None else max(1, len(gids))
+        batches = [(w, b) for w in ids for b in self.backlog.get(w, [])]
+        n = len(batches)
+        enc = {
+            "wid": np.zeros(n, dtype=np.int64),
+            "gid": np.zeros(n, dtype=np.int64),
+            "batch_id": np.zeros(n, dtype=np.int64),
+            "est_start_s": np.zeros(n, dtype=np.float64),
+            "est_latency_s": np.zeros(n, dtype=np.float64),
+            "t_before": np.zeros(n, dtype=np.float64),
+            "residency_before": np.full((n, k), -1, dtype=np.int64),
+            "dispatched": np.zeros(n, dtype=bool),
+            "offsets": np.zeros(n + 1, dtype=np.int64),
+            "members": np.empty(sum(len(b.requests) for _, b in batches), dtype=object),
+        }
+        pos = 0
+        for row, (w, b) in enumerate(batches):
+            enc["wid"][row] = w
+            enc["gid"][row] = gids[b.model]
+            enc["batch_id"][row] = b.batch_id
+            enc["est_start_s"][row] = b.est_start_s
+            enc["est_latency_s"][row] = b.est_latency_s
+            enc["t_before"][row] = b.t_before
+            for j, name in enumerate(b.residency_before):
+                enc["residency_before"][row, j] = gids[name]
+            enc["dispatched"][row] = b.dispatched
+            enc["offsets"][row] = pos
+            for r in b.requests:
+                enc["members"][pos] = r
+                pos += 1
+        enc["offsets"][n] = pos
+        return enc
+
+    @staticmethod
+    def backlog_from_arrays(
+        enc: Mapping[str, np.ndarray], gid_names: Sequence[str]
+    ) -> dict[int, list[BacklogBatch]]:
+        """Inverse of ``backlog_to_arrays`` (``gid_names[g]`` names id ``g``)."""
+        out: dict[int, list[BacklogBatch]] = {}
+        for row in range(len(enc["wid"])):
+            lo, hi = int(enc["offsets"][row]), int(enc["offsets"][row + 1])
+            out.setdefault(int(enc["wid"][row]), []).append(
+                BacklogBatch(
+                    requests=[enc["members"][i] for i in range(lo, hi)],
+                    model=gid_names[int(enc["gid"][row])],
+                    batch_id=int(enc["batch_id"][row]),
+                    est_start_s=float(enc["est_start_s"][row]),
+                    est_latency_s=float(enc["est_latency_s"][row]),
+                    t_before=float(enc["t_before"][row]),
+                    residency_before=[
+                        gid_names[int(g)]
+                        for g in enc["residency_before"][row]
+                        if g >= 0
+                    ],
+                    dispatched=bool(enc["dispatched"][row]),
+                )
+            )
+        return out
 
     @classmethod
     def from_arrays(
@@ -143,9 +377,12 @@ class StreamingState:
         gid_names: Sequence[str],
         memory_capacity_bytes: int | None = None,
         wids: Sequence[int] | None = None,
+        backlog: Mapping[str, np.ndarray] | None = None,
     ) -> "StreamingState":
         """Inverse of ``to_arrays``: rebuild the per-worker timelines from
-        the array encoding (``gid_names[g]`` names model id ``g``)."""
+        the array encoding (``gid_names[g]`` names model id ``g``).
+        ``backlog`` (a ``backlog_to_arrays`` encoding) additionally
+        restores the preemption backlog log, dispatch marks included."""
         t = np.asarray(t, dtype=np.float64)
         ids = list(wids) if wids is not None else list(range(len(t)))
         out = cls(
@@ -163,18 +400,34 @@ class StreamingState:
                 for g in range(reg.shape[1])
                 if reg[row, g] >= 0
             }
+        if backlog is not None:
+            for w, batches in cls.backlog_from_arrays(backlog, gid_names).items():
+                out.backlog[w] = batches
         return out
 
     def clone(self) -> "StreamingState":
         """Deep copy for speculative scheduling: mutating the clone's
-        timelines leaves the committed state untouched."""
+        timelines or backlog log leaves the committed state untouched
+        (the member ``Request`` objects themselves are shared)."""
         out = StreamingState.__new__(StreamingState)
         out.capacity = self.capacity
         out._now = self._now
         out.timelines = {w: tl.clone() for w, tl in self.timelines.items()}
+        out.backlog = {
+            w: [
+                dataclasses.replace(
+                    b,
+                    requests=list(b.requests),
+                    residency_before=list(b.residency_before),
+                )
+                for b in batches
+            ]
+            for w, batches in self.backlog.items()
+        }
         return out
 
     def items(self) -> Iterator[tuple[int, WorkerTimeline]]:
+        """(wid, timeline) pairs, ascending worker id."""
         return iter(sorted(self.timelines.items()))
 
     def __repr__(self) -> str:

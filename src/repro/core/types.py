@@ -54,13 +54,16 @@ class Application:
 
     @property
     def num_classes(self) -> int:
+        """Number of classes |C| shared by every variant."""
         return self.models[0].num_classes
 
     @property
     def penalty_fn(self) -> PenaltyFn:
+        """The deadline-penalty callable gamma_a (Eq. 2)."""
         return PENALTIES[self.penalty]
 
     def model(self, name: str) -> ModelProfile:
+        """Look up a variant profile by name."""
         for m in self.models:
             if m.name == name:
                 return m
@@ -98,6 +101,7 @@ class Request:
     theta: Optional[np.ndarray] = None  # posterior mean E[theta | y]
 
     def time_to_deadline(self, now: float) -> float:
+        """d_i relative to ``now`` (seconds; negative when expired)."""
         return self.deadline_s - now
 
 
@@ -120,6 +124,7 @@ class ScheduleEntry:
 
     @property
     def est_completion_s(self) -> float:
+        """Committed completion time (start + batch latency)."""
         return self.est_start_s + self.est_latency_s
 
 
@@ -137,6 +142,7 @@ class Schedule:
         return len(self.entries)
 
     def sorted_entries(self) -> list[ScheduleEntry]:
+        """Entries in execution order: (worker, order)."""
         return sorted(self.entries, key=lambda e: (e.worker, e.order))
 
     def validate(self) -> None:

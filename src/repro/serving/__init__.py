@@ -1,9 +1,17 @@
 from repro.serving.profiles import lm_latency_model, lm_profile, load_dryrun_record
-from repro.serving.runtime import ExecutionReport, LMExecutor, SwapManager, WindowQueue
+from repro.serving.runtime import (
+    ExecutionReport,
+    ExecutorPool,
+    LMExecutor,
+    SwapManager,
+    WindowQueue,
+    WorkerExecutor,
+)
 from repro.serving.server import EdgeServer, ServeStats
 
 __all__ = [
     "lm_latency_model", "lm_profile", "load_dryrun_record",
     "ExecutionReport", "LMExecutor", "SwapManager", "WindowQueue",
+    "WorkerExecutor", "ExecutorPool",
     "EdgeServer", "ServeStats",
 ]

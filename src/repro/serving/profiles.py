@@ -28,6 +28,7 @@ _DCN_BW = 25e9  # host->HBM staging bandwidth for cold weight loads (B/s)
 
 
 def load_dryrun_record(results_dir, arch: str, shape: str, mesh: str = "pod") -> dict | None:
+    """Load one dry-run roofline record, or None when absent/failed."""
     p = Path(results_dir) / f"{arch}__{shape}__{mesh}.json"
     if not p.exists():
         return None

@@ -12,17 +12,26 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import OrderedDict
-from typing import Callable, Mapping, Optional
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.multiworker import Worker
 from repro.core.residency import evict_lru
-from repro.core.types import Request, Schedule
+from repro.core.types import Request, Schedule, ScheduleEntry
 from repro.models import LM
 
-__all__ = ["WindowQueue", "SwapManager", "LMExecutor", "ExecutionReport"]
+__all__ = [
+    "WindowQueue",
+    "SwapManager",
+    "LMExecutor",
+    "ExecutionReport",
+    "WorkerExecutor",
+    "ExecutorPool",
+]
 
 
 class WindowQueue:
@@ -34,6 +43,7 @@ class WindowQueue:
         self._pending: list[Request] = []
 
     def submit(self, request: Request):
+        """Enqueue a request for the window containing its arrival."""
         self._pending.append(request)
 
     def drain_window(self, now: float) -> list[Request]:
@@ -43,6 +53,15 @@ class WindowQueue:
         ready = [r for r in self._pending if r.arrival_s <= now]
         self._pending = [r for r in self._pending if r.arrival_s > now]
         return sorted(ready, key=lambda r: (r.arrival_s, r.rid))
+
+    def readmit(self, requests: Sequence[Request]) -> None:
+        """Merge withdrawn (preempted) requests back into the queue.
+
+        Their original ``arrival_s`` is in the past, so the next
+        ``drain_window`` returns them ahead of fresh arrivals under the
+        same deterministic (arrival, rid) order — the re-admission path of
+        window-close preemption."""
+        self._pending.extend(requests)
 
     def __len__(self):
         return len(self._pending)
@@ -71,12 +90,15 @@ class SwapManager:
         self.evictions = 0
 
     def resident_bytes(self) -> int:
+        """Total bytes of currently resident model weights."""
         return sum(self._resident.values())
 
     def is_resident(self, name: str) -> bool:
+        """Whether ``name`` is currently resident (no swap charge)."""
         return name in self._resident
 
     def load(self, name: str) -> float:
+        """Make ``name`` resident; returns the swap latency charged."""
         if name in self._resident:
             self._resident.move_to_end(name)
             return 0.0
@@ -91,6 +113,8 @@ class SwapManager:
 
 @dataclasses.dataclass
 class ExecutionReport:
+    """Realized execution of one scheduled batch (timing + outputs)."""
+
     request_ids: list
     model: str
     batch_size: int
@@ -102,6 +126,7 @@ class ExecutionReport:
 
     @property
     def total_s(self) -> float:
+        """Swap + prefill + decode seconds for the batch."""
         return self.swap_s + self.prefill_s + self.decode_s
 
 
@@ -178,38 +203,210 @@ class LMExecutor:
             predictions=preds if preds is not None else [None] * prompts.shape[0],
         )
 
+    def run_entry_batch(self, batch: Sequence[ScheduleEntry],
+                        prompt_fn: Callable[[Request], np.ndarray],
+                        class_token_ids=None) -> ExecutionReport:
+        """Execute ONE batch of schedule entries (same model/batch_id)."""
+        if batch[0].model.endswith(":short_circuit"):
+            # §V-C1: answered by the SneakPeek stage — no model
+            # execution, no swap, no prompt tokenization/padding.
+            return ExecutionReport(
+                request_ids=[e.request.rid for e in batch], model=batch[0].model,
+                batch_size=len(batch), swap_s=0.0, prefill_s=0.0, decode_s=0.0,
+                tokens=np.zeros((len(batch), 0), np.int32),
+                predictions=[None] * len(batch))
+        prompts = [prompt_fn(e.request) for e in batch]
+        maxlen = max(p.shape[0] for p in prompts)
+        padded = np.zeros((len(prompts), maxlen), np.int32)
+        for k, p in enumerate(prompts):
+            padded[k, :p.shape[0]] = p
+        return self.run_batch(
+            batch[0].model, padded, [e.request.rid for e in batch], class_token_ids)
+
     def execute_schedule(self, schedule: Schedule, prompt_fn: Callable[[Request], np.ndarray],
                          class_token_ids=None) -> list[ExecutionReport]:
         """Run a scheduler-produced Schedule batch by batch (grouped entries
         with the same batch_id execute as one padded batch)."""
+        return [
+            self.run_entry_batch(batch, prompt_fn, class_token_ids)
+            for batch in iter_entry_batches(schedule.sorted_entries())
+        ]
+
+
+class WorkerExecutor:
+    """One worker's execution lane: a private ``LMExecutor`` (own
+    ``SwapManager`` — per-worker residency, exactly what the scheduler's
+    per-worker timelines model) plus the ``core.multiworker.Worker``
+    whose speed/load scaling it honors.
+
+    All lanes physically share this host's device, so heterogeneity is
+    honored in the *accounting*: measured prefill/decode seconds divide
+    by ``worker.speed`` and swap seconds multiply by
+    ``worker.load_scale``, making reported busy time consistent with the
+    scaled profiles Eq. 15 placed the batch with.
+    """
+
+    def __init__(self, worker: Worker, variants: Mapping[str, tuple],
+                 capacity_bytes: int | None = None, new_tokens: int = 4):
+        self.worker = worker
+        self.executor = LMExecutor(variants, capacity_bytes, new_tokens)
+        self.busy_s = 0.0
+
+    @property
+    def swap_count(self) -> int:
+        """Weight swaps this lane's SwapManager has performed."""
+        return self.executor.swaps.swap_count
+
+    def _scaled(self, report: ExecutionReport) -> ExecutionReport:
+        w = self.worker
+        if w.speed == 1.0 and w.load_scale == 1.0:
+            return report
+        return dataclasses.replace(
+            report,
+            swap_s=report.swap_s * w.load_scale,
+            prefill_s=report.prefill_s / w.speed,
+            decode_s=report.decode_s / w.speed,
+        )
+
+    def execute(
+        self,
+        entries: Sequence[ScheduleEntry],
+        prompt_fn: Callable[[Request], np.ndarray],
+        class_token_ids=None,
+        until: float | None = None,
+        on_dispatch: Callable[[list[int]], None] | None = None,
+    ) -> list[ExecutionReport]:
+        """Run this worker's share of a placed schedule, batch by batch.
+
+        ``until`` stops dispatch at the first batch whose committed start
+        time is at or past it (est_start_s is nondecreasing along a
+        worker's queue, so everything later stays backlogged for the next
+        window — the half of the schedule window-close preemption may
+        withdraw).  ``on_dispatch(rids)`` fires as each batch begins,
+        BEFORE execution — the serving loop uses it to set the streaming
+        state's dispatch marks so started work is never withdrawn."""
         reports = []
-        entries = schedule.sorted_entries()
-        i = 0
-        while i < len(entries):
-            j = i
-            while (
-                j + 1 < len(entries)
-                and entries[j + 1].batch_id == entries[i].batch_id
-                and entries[i].batch_id >= 0
-                and entries[j + 1].model == entries[i].model
-            ):
-                j += 1
-            batch = entries[i : j + 1]
-            if batch[0].model.endswith(":short_circuit"):
-                # §V-C1: answered by the SneakPeek stage — no model
-                # execution, no swap, no prompt tokenization/padding.
-                reports.append(ExecutionReport(
-                    request_ids=[e.request.rid for e in batch], model=batch[0].model,
-                    batch_size=len(batch), swap_s=0.0, prefill_s=0.0, decode_s=0.0,
-                    tokens=np.zeros((len(batch), 0), np.int32),
-                    predictions=[None] * len(batch)))
-            else:
-                prompts = [prompt_fn(e.request) for e in batch]
-                maxlen = max(p.shape[0] for p in prompts)
-                padded = np.zeros((len(prompts), maxlen), np.int32)
-                for k, p in enumerate(prompts):
-                    padded[k, :p.shape[0]] = p
-                reports.append(self.run_batch(
-                    batch[0].model, padded, [e.request.rid for e in batch], class_token_ids))
-            i = j + 1
+        for batch in iter_entry_batches(sorted(entries, key=lambda e: e.order)):
+            if until is not None and batch[0].est_start_s >= until - 1e-12:
+                break
+            if on_dispatch is not None:
+                on_dispatch([e.request.rid for e in batch])
+            report = self._scaled(
+                self.executor.run_entry_batch(batch, prompt_fn, class_token_ids)
+            )
+            self.busy_s += report.total_s
+            reports.append(report)
         return reports
+
+
+class ExecutorPool:
+    """The multi-worker execution plane: one ``WorkerExecutor`` lane per
+    ``core.multiworker.Worker``, executing each window's placed schedule
+    per worker — concurrently, since JAX dispatch releases the GIL while
+    device computation runs.
+
+    This is what turns the Eq. 15 placement algebra into realized work:
+    ``EdgeServer(workers=[...], executor=...)`` routes every scheduled
+    window here instead of the single-``LMExecutor`` path, and feeds the
+    per-lane swap counts and busy seconds into ``ServeStats``.
+    """
+
+    def __init__(self, workers: Sequence[Worker], variants: Mapping[str, tuple],
+                 capacity_bytes: int | None = None, new_tokens: int = 4):
+        if not workers:
+            raise ValueError("ExecutorPool requires at least one worker")
+        self.lanes: dict[int, WorkerExecutor] = {
+            w.wid: WorkerExecutor(w, variants, capacity_bytes, new_tokens)
+            for w in workers
+        }
+        self.wall_s = 0.0  # wall-clock spent inside execute_schedule calls
+        # One long-lived thread per lane: the serving loop closes a window
+        # every ~100 ms, so spawn/join per window would be pure overhead.
+        self._tp: ThreadPoolExecutor | None = None
+
+    @classmethod
+    def from_executor(cls, executor: LMExecutor,
+                      workers: Sequence[Worker]) -> "ExecutorPool":
+        """Build a pool with one lane per worker from a single-executor
+        config (same variants / capacity / new_tokens); each lane still
+        owns its residency, as a real per-worker memory would."""
+        return cls(
+            workers,
+            executor.variants,
+            capacity_bytes=executor.swaps.capacity,
+            new_tokens=executor.new_tokens,
+        )
+
+    @property
+    def swap_counts(self) -> dict[int, int]:
+        """Per-worker weight-swap counts (lane SwapManagers)."""
+        return {w: lane.swap_count for w, lane in sorted(self.lanes.items())}
+
+    @property
+    def busy_s(self) -> dict[int, float]:
+        """Per-worker busy seconds (scaled swap + prefill + decode)."""
+        return {w: lane.busy_s for w, lane in sorted(self.lanes.items())}
+
+    def utilization(self) -> dict[int, float]:
+        """Per-worker busy / pool-wall fraction (0.0 before any work)."""
+        if self.wall_s <= 0:
+            return {w: 0.0 for w in sorted(self.lanes)}
+        return {w: lane.busy_s / self.wall_s for w, lane in sorted(self.lanes.items())}
+
+    def execute_schedule(
+        self,
+        schedule: Schedule,
+        prompt_fn: Callable[[Request], np.ndarray],
+        class_token_ids=None,
+        until: float | None = None,
+        on_dispatch: Callable[[list[int]], None] | None = None,
+    ) -> list[ExecutionReport]:
+        """Execute a placed schedule: entries split by ``entry.worker``,
+        each lane running its share in order on its own thread.  ``until``
+        and ``on_dispatch`` are forwarded to every lane (see
+        ``WorkerExecutor.execute``).  Reports return grouped by worker id,
+        each lane's in dispatch order.
+
+        Concurrency contract: ``prompt_fn`` and ``on_dispatch`` are
+        invoked from multiple lane threads at once — unlike the
+        sequential single-``LMExecutor`` path, they must be thread-safe
+        (derive any randomness from the request, e.g. its rid, rather
+        than mutating one shared generator)."""
+        by_worker: dict[int, list[ScheduleEntry]] = {}
+        for e in schedule.sorted_entries():
+            by_worker.setdefault(e.worker, []).append(e)
+        unknown = set(by_worker) - set(self.lanes)
+        if unknown:
+            raise KeyError(f"schedule places work on unpooled workers {sorted(unknown)}")
+        if self._tp is None:
+            self._tp = ThreadPoolExecutor(max_workers=len(self.lanes))
+        t0 = time.perf_counter()
+        futures = {
+            wid: self._tp.submit(
+                self.lanes[wid].execute, entries, prompt_fn,
+                class_token_ids, until, on_dispatch,
+            )
+            for wid, entries in by_worker.items()
+        }
+        reports = [r for wid in sorted(futures) for r in futures[wid].result()]
+        self.wall_s += time.perf_counter() - t0
+        return reports
+
+
+def iter_entry_batches(entries: Sequence[ScheduleEntry]):
+    """Group an ordered entry list into dispatchable batches: maximal runs
+    of consecutive entries sharing (batch_id >= 0, model) — the same
+    grouping rule ``evaluate`` replays with, so realized batches match the
+    scheduler's batching decisions."""
+    i = 0
+    while i < len(entries):
+        j = i
+        while (
+            j + 1 < len(entries)
+            and entries[j + 1].batch_id == entries[i].batch_id
+            and entries[i].batch_id >= 0
+            and entries[j + 1].model == entries[i].model
+        ):
+            j += 1
+        yield entries[i : j + 1]
+        i = j + 1

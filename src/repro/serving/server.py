@@ -1,12 +1,17 @@
 """EdgeServer: the end-to-end serving loop (paper Fig. 1).
 
     data streams -> SneakPeek stage -> window queue -> scheduler
-        -> (grouped, model-selected) schedule -> LMExecutor -> results
+        -> (grouped, model-selected, placed) schedule -> executor -> results
 
 Components are the real ones: the scheduler is ``repro.core`` (any of
 the five policies), the SneakPeek stage computes k-NN Dirichlet
 posteriors, and the executor runs actual JAX models (reduced configs on
-CPU, pod configs via the same jitted steps).
+CPU, pod configs via the same jitted steps).  With ``workers=[...]`` the
+execution plane is an ``ExecutorPool`` — one lane per worker, running
+each window's Eq. 15 placement concurrently — and ``preempt=True``
+additionally withdraws committed-but-unstarted work at every window
+close and re-schedules it under the fresh pool state (see
+``repro.core.streaming``).
 """
 from __future__ import annotations
 
@@ -20,13 +25,15 @@ from repro.core.evaluation import evaluate
 from repro.core.scheduler import SchedulerPolicy, effective_apps, schedule_window
 from repro.core.streaming import StreamingState
 from repro.core.types import Application, Request
-from repro.serving.runtime import LMExecutor, WindowQueue
+from repro.serving.runtime import ExecutorPool, LMExecutor, WindowQueue
 
 __all__ = ["EdgeServer", "ServeStats"]
 
 
 @dataclasses.dataclass
 class ServeStats:
+    """Aggregate serving metrics accumulated across windows."""
+
     windows: int = 0
     requests: int = 0
     violations: int = 0
@@ -39,6 +46,16 @@ class ServeStats:
     # (busiest worker's committed busy-until time).
     worker_busy_s: dict = dataclasses.field(default_factory=dict)
     span_s: float = 0.0
+    # Executor-pool realized metrics (multi-worker execution plane):
+    # per-lane weight-swap counts and scaled busy seconds, fed from the
+    # pool after each window's dispatch.
+    worker_swaps: dict = dataclasses.field(default_factory=dict)
+    pool_busy_s: dict = dataclasses.field(default_factory=dict)
+    # Window-close preemption: requests withdrawn for re-scheduling, and
+    # withdrawn requests dropped because their deadline had passed (each
+    # dropped request keeps a recorded violation and zero utility).
+    preempted: int = 0
+    dropped: int = 0
 
     @property
     def worker_utilization(self) -> dict:
@@ -52,12 +69,15 @@ class ServeStats:
         }
 
     def as_dict(self):
+        """Dataclass fields plus the derived per-worker utilization."""
         out = dataclasses.asdict(self)
         out["worker_utilization"] = self.worker_utilization
         return out
 
 
 class EdgeServer:
+    """Windowed serving loop: queue -> scheduler -> streaming commit -> executor."""
+
     def __init__(
         self,
         apps: Mapping[str, Application],
@@ -70,6 +90,7 @@ class EdgeServer:
         workers=None,
         memory_capacity_bytes: int | None = None,
         pipeline: bool = False,
+        preempt: bool = False,
     ):
         """``workers`` (a sequence of ``core.multiworker.Worker``) switches
         scheduling to §VII multi-worker placement; without it the policy
@@ -79,7 +100,21 @@ class EdgeServer:
         across windows) and COMPOSES with ``workers`` — placement then
         runs through the compiled Eq. 15 program — and with
         ``memory_capacity_bytes`` (capacity-aware LRU residency inside
-        the compiled selectors)."""
+        the compiled selectors).
+
+        ``executor`` may be a single ``LMExecutor`` or an
+        ``ExecutorPool``; with ``workers`` set, a single executor is
+        wrapped into a pool (one lane per worker, same variants) so each
+        window's placed schedule actually runs per worker, concurrently.
+
+        ``preempt=True`` enables window-close preemption: at every close,
+        backlogged-but-unstarted entries (committed by the scheduler but
+        not yet dispatched by the pool) are withdrawn, merged into the
+        next window's queue, and re-scheduled under the fresh posteriors
+        and pool state; withdrawn entries already past their deadline are
+        dropped with a recorded violation.  Off by default — with
+        ``preempt=False`` every scheduling decision is bit-identical to
+        the non-preemptive server."""
         self.apps = dict(apps)
         self.policy = policy
         self.executor = executor
@@ -89,8 +124,26 @@ class EdgeServer:
         self.prompt_fn = prompt_fn
         self.stats = ServeStats()
         self._utility_sum = 0.0
+        self.preempt = bool(preempt)
+        # Per-request realized (utility, violated) records — the preempt
+        # accounting unit: a re-scheduled request OVERWRITES its record,
+        # so withdrawn work is never double-counted.  The aggregates are
+        # maintained incrementally (_set_record), not by rescanning the
+        # whole history every window.
+        self._records: dict[int, tuple[float, bool]] = {}
+        self._records_utility = 0.0
+        self._records_violations = 0
         self.workers = list(workers) if workers else None
         self.num_workers = len(self.workers) if self.workers else 1
+        self.pool = None
+        if self.workers and executor is not None:
+            self.pool = (
+                executor
+                if isinstance(executor, ExecutorPool)
+                else ExecutorPool.from_executor(executor, self.workers)
+            )
+        elif isinstance(executor, ExecutorPool):
+            raise ValueError("ExecutorPool requires workers=[...] placement")
         # Streaming state: per-worker backlog + model residency carried
         # across windows (scheduling peeks it, evaluation commits to it).
         self.state = StreamingState(
@@ -109,10 +162,61 @@ class EdgeServer:
             )
 
     def submit(self, request: Request):
+        """Enqueue one request for the window containing its arrival."""
         self.queue.submit(request)
 
+    def _preempt_window(self, now: float) -> None:
+        """Window-close preemption: withdraw committed-but-unstarted work
+        from the streaming state, drop what already expired (recorded
+        violation, zero utility), re-admit the rest through the queue."""
+        readmit, expired = self.state.preempt(now)
+        self.stats.preempted += len(readmit) + len(expired)
+        for r in expired:
+            # A close can drop work even when it drains no new requests,
+            # so the aggregates update here too, not just in _account.
+            self._set_record(r.rid, 0.0, True)
+        self.stats.dropped += len(expired)
+        if readmit:
+            self.queue.readmit(readmit)
+
+    def _set_record(self, rid: int, utility: float, violated: bool) -> None:
+        """Insert or overwrite one per-request record, adjusting the
+        running aggregates incrementally (a re-scheduled request's stale
+        contribution is subtracted before its new one is added)."""
+        old = self._records.get(rid)
+        if old is not None:
+            self._records_utility -= old[0]
+            self._records_violations -= int(old[1])
+        self._records[rid] = (utility, violated)
+        self._records_utility += utility
+        self._records_violations += int(violated)
+        self.stats.requests = len(self._records)
+        self.stats.violations = self._records_violations
+        self.stats.mean_utility = self._records_utility / len(self._records)
+
+    def _account(self, sched, res) -> None:
+        """Fold one evaluated window into the aggregate stats.
+
+        Non-preemptive servers accumulate sums directly (a request is
+        scheduled exactly once).  Preemptive servers keep per-request
+        records instead: a re-scheduled request overwrites its earlier
+        (stale) utility/violation, so totals always reflect the LAST
+        commitment for each request."""
+        if not self.preempt:
+            self.stats.requests += len(res.utilities)
+            self.stats.violations += res.violations
+            self._utility_sum += res.utilities.sum()
+            self.stats.mean_utility = self._utility_sum / max(self.stats.requests, 1)
+            return
+        over = res.completions > res.deadlines
+        for e, u, miss in zip(sched.sorted_entries(), res.utilities, over):
+            self._set_record(e.request.rid, float(u), bool(miss))
+
     def run_window(self, now: float):
-        """Close the current window: schedule + (optionally) execute."""
+        """Close the current window: (optionally) preempt, schedule,
+        commit, and execute."""
+        if self.preempt:
+            self._preempt_window(now)
         requests = self.queue.drain_window(now)
         if not requests:
             return None
@@ -120,7 +224,8 @@ class EdgeServer:
 
         if self._pipeline is not None:
             # Fused data plane: batched ingest + compiled window program
-            # (reused across windows), peeking the carried state.
+            # (reused across windows), peeking the carried state.  Ingest
+            # skips re-admitted requests (evidence drawn once).
             self._pipeline.ingest(requests)
             sched = self._pipeline.schedule(requests, now, state=self.state)
             eff_apps = self._eff_apps
@@ -133,10 +238,7 @@ class EdgeServer:
             )
         res = evaluate(sched, eff_apps, now, acc_mode="oracle", state=self.state)
         self.stats.windows += 1
-        self.stats.requests += len(requests)
-        self.stats.violations += res.violations
-        self._utility_sum += res.utilities.sum()
-        self.stats.mean_utility = self._utility_sum / max(self.stats.requests, 1)
+        self._account(sched, res)
         self.stats.scheduling_overhead_s += sched.scheduling_overhead_s
         # Per-worker utilization, fed from the streaming state at commit:
         # this window's realized busy seconds plus the pool's committed
@@ -148,7 +250,24 @@ class EdgeServer:
         )
 
         reports = None
-        if self.executor is not None and self.prompt_fn is not None:
+        if self.pool is not None and self.prompt_fn is not None:
+            # Multi-worker execution plane: each lane runs its share of
+            # the placed schedule concurrently.  With preemption on, only
+            # batches committed to start inside the upcoming window are
+            # dispatched (and marked so in the state); the rest stays
+            # backlogged, revisable at the next close.
+            t1 = time.perf_counter()
+            reports = self.pool.execute_schedule(
+                sched,
+                self.prompt_fn,
+                until=now + self.queue.window_s if self.preempt else None,
+                on_dispatch=self.state.mark_dispatched if self.preempt else None,
+            )
+            self.stats.swaps = sum(self.pool.swap_counts.values())
+            self.stats.worker_swaps = dict(self.pool.swap_counts)
+            self.stats.pool_busy_s = dict(self.pool.busy_s)
+            self.stats.wall_s += time.perf_counter() - t1
+        elif self.executor is not None and self.prompt_fn is not None:
             t1 = time.perf_counter()
             reports = self.executor.execute_schedule(sched, self.prompt_fn)
             self.stats.swaps = self.executor.swaps.swap_count
@@ -160,6 +279,12 @@ class EdgeServer:
 
         ``horizon_s=None`` (the default) serves until the last arrival;
         an explicit horizon — including ``0.0`` — is honored as given.
+
+        A preemptive server with an executor pool gates dispatch to the
+        upcoming window, so after the horizon it keeps closing windows
+        until every committed batch has been dispatched (or withdrawn
+        and dropped as expired) — otherwise work gated out of the FINAL
+        window would silently never run while still counting as served.
         """
         for r in sorted(requests, key=lambda x: x.arrival_s):
             self.submit(r)
@@ -170,4 +295,16 @@ class EdgeServer:
             out = self.run_window(w * self.queue.window_s)
             if out:
                 outs.append(out)
+        if self.preempt and self.pool is not None and self.prompt_fn is not None:
+            # Flush: each extra close withdraws/re-schedules the
+            # still-undispatched tail and dispatches what now starts
+            # inside the next window.  The committed horizon is finite,
+            # so this terminates; the cap is a safety net only.
+            while (
+                len(self.queue) or self.state.undispatched_backlog()
+            ) and w < n_windows + 10_000:
+                w += 1
+                out = self.run_window(w * self.queue.window_s)
+                if out:
+                    outs.append(out)
         return outs, self.stats

@@ -1,0 +1,320 @@
+"""Window-close preemption semantics (serving tentpole).
+
+Covers the contract of ``StreamingState``'s backlog log + ``preempt``,
+the EdgeServer re-admission loop, and the executor pool's dispatch
+marks:
+
+  * started (or dispatched) entries are NEVER withdrawn;
+  * withdrawal rolls the worker timeline back exactly (busy-until time
+    AND LRU residency);
+  * deadline-expired backlog is dropped with a recorded violation and
+    zero utility;
+  * ``preempt=False`` matches the non-preemptive server's decisions
+    bit-for-bit across all five policies with ``workers=[...]``;
+  * the dispatch mark round-trips through ``to_arrays``/``from_arrays``;
+  * a backlogged-but-unstarted request is re-scheduled in a later window
+    onto a different (worker, model) with its utility re-accounted.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    POLICY_NAMES,
+    Application,
+    ModelProfile,
+    Request,
+    Worker,
+    evaluate,
+    make_policy,
+)
+from repro.core.scheduler import effective_apps, schedule_window
+from repro.core.streaming import StreamingState
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+from repro.serving import EdgeServer, ExecutorPool, WindowQueue
+
+
+def _mk(rid, arrival, deadline, app="a"):
+    return Request(rid=rid, app=app, arrival_s=arrival, deadline_s=deadline,
+                   true_label=0)
+
+
+def _two_model_app(penalty="step"):
+    models = [
+        ModelProfile("fast", recalls=np.array([0.75, 0.75]),
+                     latency_s=0.02, load_latency_s=0.01),
+        ModelProfile("acc", recalls=np.array([0.95, 0.95]),
+                     latency_s=0.09, load_latency_s=0.04),
+    ]
+    return Application(name="a", models=models, penalty=penalty)
+
+
+def _seed_state(now=0.1):
+    """A 2-worker state with three committed batches on worker 0:
+    one started before ``now+0.1``, two starting after it."""
+    state = StreamingState(num_workers=2)
+    app = _two_model_app()
+    reqs = [_mk(i, 0.0, 1.0) for i in range(3)]
+    tl = state.timeline(0)
+    tl.advance(now)
+    for i, (model, r) in enumerate(zip(["acc", "fast", "acc"], reqs)):
+        t_before, res_before = tl.t, list(tl._resident)
+        start, completion = tl.run_batch(app.model(model), 1)
+        state.record_batch(0, [r], model, i, start, completion - start,
+                           t_before, res_before)
+    return state, reqs
+
+
+def test_started_entries_never_withdrawn():
+    """Batches started in committed time — and unstarted batches the pool
+    has dispatched — survive preemption; only the unstarted tail goes."""
+    state, reqs = _seed_state(now=0.1)
+    # worker 0 backlog: starts at 0.10 / 0.23 / 0.26 (swap + latency).
+    starts = [b.est_start_s for b in state.backlog[0]]
+    assert starts[0] == pytest.approx(0.1) and starts[1] > 0.2
+    readmit, expired = state.preempt(0.2)
+    assert [r.rid for r in readmit] == [1, 2] and expired == []
+    kept = state.backlog[0]
+    assert [b.rids for b in kept] == [[0]]  # the started batch survives
+
+    # Same scenario, but the pool dispatched the second batch before the
+    # close: the dispatch mark shields it AND everything before it.
+    state, reqs = _seed_state(now=0.1)
+    state.mark_dispatched([1])
+    readmit, _ = state.preempt(0.2)
+    assert [r.rid for r in readmit] == [2]
+    assert [b.rids for b in state.backlog[0]] == [[0], [1]]
+
+
+def test_preempt_rolls_back_timeline_and_residency():
+    """Withdrawal restores the pre-batch snapshot of the earliest
+    withdrawn batch: busy-until time and LRU residency both roll back."""
+    state, _ = _seed_state(now=0.1)
+    tl = state.timeline(0)
+    t_committed, resident_committed = tl.t, list(tl._resident)
+    assert resident_committed == ["acc"]  # last batch loaded "acc"
+    first_withdrawn = state.backlog[0][1]
+    state.preempt(0.2)
+    assert tl.t == pytest.approx(first_withdrawn.t_before)
+    assert tl._resident == first_withdrawn.residency_before == ["acc"]
+    assert tl.t < t_committed
+
+    # Nothing to withdraw at a later close (everything started): no-op.
+    t_after = tl.t
+    state.preempt(10.0)  # all remaining batches started long before
+    assert tl.t == t_after
+
+
+def test_expired_backlog_dropped_with_recorded_violation():
+    """A withdrawn request whose deadline passed while backlogged is
+    dropped — recorded as a violation with zero utility — not re-queued."""
+    apps = {"a": _two_model_app()}
+    # Twelve same-deadline (0.18) requests: the pool cannot start them
+    # all before the 0.2 close; the unstarted tail is withdrawn there
+    # with its deadline already expired.
+    trace = [_mk(i, 0.005 * i, 0.18) for i in range(12)]
+    srv = EdgeServer(apps, make_policy("LO-EDF"),
+                     workers=[Worker(0), Worker(1)],
+                     preempt=True)
+    # Force a second window so the preemption pass runs at 0.2.
+    trace += [_mk(50, 0.15, 0.6)]
+    outs, stats = srv.run(trace)
+    assert stats.dropped >= 1
+    dropped_rids = [rid for rid, rec in srv._records.items()
+                    if rec == (0.0, True)]
+    assert dropped_rids
+    for rid in dropped_rids:
+        later = [o for o in outs[1:]
+                 if any(e.request.rid == rid for e in o["schedule"].entries)]
+        assert later == []  # dropped, never re-scheduled
+    assert stats.violations >= len(dropped_rids)
+    # Dropped requests still count toward the request total exactly once.
+    assert stats.requests == len(trace)
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+def test_preempt_false_bit_identical(policy_name):
+    """``preempt=False`` multi-worker serving reproduces the plain
+    schedule_window/evaluate streaming loop decision-for-decision."""
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    workers = [Worker(0), Worker(1, speed=2.0)]
+    reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=2)
+    policy = make_policy(policy_name)
+    sp = sneaks if policy.data_aware else None
+
+    srv = EdgeServer(apps, policy, sneakpeeks=sp,
+                     workers=list(workers), preempt=False)
+    outs, stats = srv.run([Request(r.rid, r.app, r.arrival_s, r.deadline_s,
+                                   r.features, r.true_label) for r in reqs])
+    got = [(e.request.rid, e.model, e.order, e.worker, e.batch_id)
+           for o in outs for e in o["schedule"].sorted_entries()]
+
+    # Reference: the pre-pool streaming loop, windows closed the same way.
+    ref_reqs = [Request(r.rid, r.app, r.arrival_s, r.deadline_s,
+                        r.features, r.true_label) for r in reqs]
+    state = StreamingState(num_workers=2, worker_ids=[0, 1])
+    eff = effective_apps(apps, sp, False)
+    queue = WindowQueue(0.1)
+    for r in ref_reqs:
+        queue.submit(r)
+    t_end = max(r.arrival_s for r in ref_reqs)
+    want, u_sum, n = [], 0.0, 0
+    for w in range(1, int(np.ceil(t_end / 0.1)) + 1):
+        now = w * 0.1
+        batch = queue.drain_window(now)
+        if not batch:
+            continue
+        if sp:
+            from repro.core.sneakpeek import attach_sneakpeek
+            attach_sneakpeek(batch, apps, sp)
+        sched, eff_w = schedule_window(policy, batch, eff, now,
+                                       workers=workers, state=state)
+        res = evaluate(sched, eff_w, now, acc_mode="oracle", state=state)
+        u_sum += res.utilities.sum()
+        n += len(batch)
+        want += [(e.request.rid, e.model, e.order, e.worker, e.batch_id)
+                 for e in sched.sorted_entries()]
+    assert got == want
+    assert stats.mean_utility == pytest.approx(u_sum / n, abs=0, rel=0)
+
+
+def test_dispatch_mark_roundtrips_through_arrays():
+    """to_arrays(include_backlog=True) / from_arrays(backlog=...) is
+    lossless for the backlog log, dispatch marks included."""
+    state, _ = _seed_state(now=0.1)
+    state.mark_dispatched([1])
+    gids = {"fast": 0, "acc": 1}
+    t, res, reg, backlog = state.to_arrays(gids, include_backlog=True)
+    assert backlog["dispatched"].tolist() == [False, True, False]
+    rebuilt = StreamingState.from_arrays(
+        t, res, reg, ["fast", "acc"], wids=[0, 1], backlog=backlog)
+    assert set(rebuilt.backlog) >= {0}
+    orig, back = state.backlog[0], rebuilt.backlog[0]
+    assert len(back) == len(orig) == 3
+    for a, b in zip(orig, back):
+        assert (a.rids, a.model, a.batch_id, a.dispatched) == \
+               (b.rids, b.model, b.batch_id, b.dispatched)
+        assert b.est_start_s == a.est_start_s
+        assert b.est_latency_s == a.est_latency_s
+        assert b.t_before == a.t_before
+        assert b.residency_before == a.residency_before
+        assert b.requests == a.requests  # same Request payload
+    # The rebuilt state preempts identically to the original.
+    r_a, _ = state.preempt(0.2)
+    r_b, _ = rebuilt.preempt(0.2)
+    assert [r.rid for r in r_a] == [r.rid for r in r_b]
+    assert rebuilt.timeline(0).t == state.timeline(0).t
+
+
+def test_backlogged_request_rescheduled_across_windows():
+    """Acceptance scenario: a committed-but-unstarted request is withdrawn
+    at window close and re-scheduled onto a DIFFERENT (worker, model) in
+    the next window, with its utility re-accounted from the new slot."""
+    apps = {"a": _two_model_app(penalty="step")}
+    trace = [_mk(i, 0.01 * i, 0.50) for i in range(6)]
+    trace += [_mk(100 + i, 0.15, 0.45) for i in range(2)]
+    srv = EdgeServer(apps, make_policy("LO-EDF"),
+                     workers=[Worker(0), Worker(1, speed=0.5)], preempt=True)
+    outs, stats = srv.run([Request(r.rid, r.app, r.arrival_s, r.deadline_s,
+                                   r.features, r.true_label) for r in trace])
+    assert stats.preempted > 0 and stats.dropped == 0
+    placements = {}  # rid -> [(window, model, worker, utility)]
+    for wi, o in enumerate(outs):
+        entries = o["schedule"].sorted_entries()
+        for e, u in zip(entries, o["eval"].utilities):
+            placements.setdefault(e.request.rid, []).append(
+                (wi, e.model, e.worker, float(u)))
+    moved = {rid: p for rid, p in placements.items() if len(p) > 1}
+    assert moved, "no request was re-scheduled"
+    # rid 3: committed (acc, worker 0) in window 0, withdrawn, re-placed
+    # as (fast, worker 1) in window 1 — different worker AND model.
+    assert len(placements[3]) == 2
+    (_, m0, w0, _), (_, m1, w1, u1) = placements[3]
+    assert (m0, w0) == ("acc", 0) and (m1, w1) == ("fast", 1)
+    # Utility accounting: each request counts ONCE, at its final slot.
+    final = {rid: p[-1][3] for rid, p in placements.items()}
+    assert stats.requests == len(final) == len(trace)
+    assert stats.mean_utility == pytest.approx(
+        sum(final.values()) / len(final))
+
+
+def test_executor_pool_dispatch_gating_and_marks():
+    """With preemption on, the pool dispatches only batches committed to
+    start inside the upcoming window and marks them in the state; the
+    undispatched remainder is withdrawn at the next close.
+
+    Uses short-circuit variants so no real model runs (the lane skips
+    prompt handling entirely for them) — this exercises the pool's
+    split/gate/mark logic, not JAX execution.
+    """
+    from repro.core import Schedule, ScheduleEntry
+
+    workers = [Worker(0), Worker(1)]
+    pool = ExecutorPool(workers, variants={})
+    reqs = [_mk(i, 0.0, 5.0) for i in range(4)]
+    entries = [
+        ScheduleEntry(request=reqs[0], model="sp:short_circuit", order=1,
+                      worker=0, batch_id=0, est_start_s=0.10, est_latency_s=0.05),
+        ScheduleEntry(request=reqs[1], model="sp:short_circuit", order=2,
+                      worker=0, batch_id=1, est_start_s=0.25, est_latency_s=0.05),
+        ScheduleEntry(request=reqs[2], model="sp:short_circuit", order=1,
+                      worker=1, batch_id=2, est_start_s=0.12, est_latency_s=0.02),
+        ScheduleEntry(request=reqs[3], model="sp:short_circuit", order=2,
+                      worker=1, batch_id=3, est_start_s=0.30, est_latency_s=0.02),
+    ]
+    dispatched = []
+    reports = pool.execute_schedule(
+        Schedule(entries=entries), prompt_fn=lambda r: None,
+        until=0.2, on_dispatch=dispatched.append)
+    # Only the batches starting before 0.2 ran — one per worker.
+    assert sorted(r.request_ids[0] for r in reports) == [0, 2]
+    assert sorted(rids[0] for rids in dispatched) == [0, 2]
+    assert all(r.total_s == 0.0 for r in reports)  # short-circuit: no model
+
+
+def test_preempt_run_flushes_final_window_backlog():
+    """Regression: work gated out of the FINAL window's dispatch must not
+    be silently dropped — run() keeps closing windows until every
+    committed batch is dispatched (or expires)."""
+    from repro.configs import ARCHS
+    from repro.serving import LMExecutor
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    models = [
+        ModelProfile("small", recalls=np.array([0.7, 0.7]),
+                     latency_s=0.08, load_latency_s=0.01),
+    ]
+    app = Application(name="lm", models=models, penalty="sigmoid")
+
+    def prompt_fn(r):
+        return np.random.default_rng(r.rid).integers(
+            0, cfg.vocab_size, 8).astype(np.int32)
+
+    srv = EdgeServer({"lm": app}, make_policy("LO-EDF"),
+                     executor=LMExecutor({"small": (cfg, 0)}, new_tokens=1),
+                     prompt_fn=prompt_fn,
+                     workers=[Worker(0), Worker(1)], preempt=True)
+    # All six arrive in window 1; per-worker backlog (3 x ~90 ms) extends
+    # well past the only arrival-driven close at 0.1.
+    reqs = [Request(rid=i, app="lm", arrival_s=0.01 * i, deadline_s=5.0,
+                    true_label=0) for i in range(6)]
+    outs, stats = srv.run(reqs)
+    assert stats.windows > 1  # flush windows ran past the horizon
+    executed = [rid for o in outs for rep in (o["reports"] or [])
+                for rid in rep.request_ids]
+    assert sorted(executed) == list(range(6))  # every request really ran
+    assert srv.state.undispatched_backlog() == 0
+    assert stats.dropped == 0 and stats.requests == 6
+
+
+def test_readmitted_requests_keep_their_posterior():
+    """Re-admitted requests are not re-ingested: the SneakPeek evidence
+    drawn at first arrival survives withdrawal and re-scheduling."""
+    from repro.core.sneakpeek import attach_sneakpeek
+
+    apps, sneaks = build_benchmark_suite(backend="numpy")
+    reqs = make_requests(list(APP_SPECS.values()), per_app=2, seed=0)
+    attach_sneakpeek(reqs, apps, sneaks)
+    before = [r.evidence.copy() for r in reqs]
+    attach_sneakpeek(reqs, apps, sneaks)  # second pass: must be a no-op
+    for r, b in zip(reqs, before):
+        np.testing.assert_array_equal(r.evidence, b)

@@ -201,6 +201,47 @@ def test_edge_server_pipeline_composes_with_workers():
     np.testing.assert_allclose(stats_b.mean_utility, stats_p.mean_utility, atol=1e-12)
 
 
+def test_edge_server_pool_executes_per_worker_shares():
+    """Tentpole: with ``workers=[...]`` and an executor, EdgeServer wraps
+    it into an ExecutorPool — each worker's share of the placed schedule
+    actually runs, and per-worker swap counts / busy seconds reach
+    ServeStats from the pool (not the single-executor path)."""
+    from repro.core import Worker
+    from repro.serving import ExecutorPool
+
+    cfg_s = ARCHS["mamba2-130m"].reduced()
+    models = [
+        ModelProfile("small", recalls=np.array([0.7, 0.7]),
+                     latency_s=0.01, load_latency_s=0.01),
+        ModelProfile("big", recalls=np.array([0.9, 0.9]),
+                     latency_s=0.05, load_latency_s=0.05),
+    ]
+    app = Application(name="lm", models=models, penalty="sigmoid")
+    ex = LMExecutor({"small": (cfg_s, 0), "big": (cfg_s, 1)}, new_tokens=1)
+
+    def prompt_fn(r):
+        # Pool lanes call prompt_fn concurrently: seed per request.
+        return np.random.default_rng(r.rid).integers(
+            0, cfg_s.vocab_size, 8).astype(np.int32)
+
+    srv = EdgeServer({"lm": app}, make_policy("LO-EDF"), executor=ex,
+                     prompt_fn=prompt_fn,
+                     workers=[Worker(0), Worker(1, speed=2.0)])
+    assert isinstance(srv.pool, ExecutorPool)
+    reqs = [Request(rid=i, app="lm", arrival_s=0.01 * i, deadline_s=0.2,
+                    true_label=0) for i in range(6)]
+    outs, stats = srv.run(reqs)
+    reports = [rep for o in outs for rep in (o["reports"] or [])]
+    assert sum(r.batch_size for r in reports) == 6
+    # Placement used both workers and each lane reports realized work.
+    used = {e.worker for o in outs for e in o["schedule"].entries}
+    assert used == {0, 1}
+    assert set(stats.worker_swaps) == {0, 1}
+    assert all(n >= 1 for n in stats.worker_swaps.values())
+    assert stats.swaps == sum(stats.worker_swaps.values())
+    assert all(stats.pool_busy_s[w] > 0 for w in used)
+
+
 def test_edge_server_run_honors_zero_horizon():
     """Regression: an explicit ``horizon_s=0.0`` must not be treated as
     unset (the old ``horizon_s or max(...)`` truthiness bug) — it serves
