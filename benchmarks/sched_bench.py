@@ -32,6 +32,12 @@ per-request, with one persistent ``WindowPipeline`` per cell so the
 compiled program is reused across timed windows.  Gate: every cell at
 1024 requests x 2 workers must at least match the numpy fast path.
 
+``--pipeline`` with workers also times a closed-loop overhead cell: the
+MW-SneakPeek compiled placement with the health tracker's drift
+``lat_scale`` + all-healthy ``worker_mask`` plugged in, gated at < 5%
+added schedule latency (fault tolerance must be ~free when no faults
+fire).
+
 Writes ``results/benchmarks/BENCH_sched.json`` (the single committed
 benchmark artifact) and prints a table.  Acceptance gates: the SneakPeek
 x 1024-request cell must exceed 5x, and the 2-worker x 1024-request
@@ -260,6 +266,66 @@ def run_pipeline_multiworker(sizes, worker_counts, min_time_s=0.2):
     return rows
 
 
+def run_health_overhead(n=1024, nw=2, min_time_s=0.2):
+    """Closed-loop bookkeeping overhead on the MW-SneakPeek gate cell.
+
+    Times the compiled Eq. 15 pipeline schedule with and without the
+    health tracker's outputs plugged in — a converged drift ``lat_scale``
+    (every (worker, model) pair observed ~5% slow) and the all-healthy
+    ``worker_mask`` (None: the honest hot path when nothing is
+    quarantined).  No faults fire; the cell isolates what fault tolerance
+    costs a healthy pool.  Gate: < 5% added schedule latency."""
+    try:
+        import jax  # noqa: F401
+
+        from repro.core.pipeline import WindowPipeline
+    except ImportError:
+        print("health overhead section skipped (JAX unavailable)", flush=True)
+        return None
+    from repro.core.health import HealthTracker
+
+    reqs, apps, _ = build_window(n)
+    actual_n = len(reqs)
+    workers = heterogeneous_pool(nw)
+    tracker = HealthTracker([w.wid for w in workers])
+    for w in workers:
+        for app in apps.values():
+            for m in app.models:
+                tracker.observe(w.wid, m.name, realized_s=0.105, committed_s=0.1)
+    lat_scale = tracker.latency_scale()
+    mask = tracker.active_wids(workers)
+    assert lat_scale and mask is None  # converged drift, all lanes healthy
+    wp = WindowPipeline(
+        apps, policy=make_policy("SneakPeek", pipeline=True), workers=workers
+    )
+
+    def plain():
+        return wp.schedule(reqs, 0.1)
+
+    def closed():
+        return wp.schedule(reqs, 0.1, lat_scale=lat_scale, worker_mask=mask)
+
+    plain()  # compile + build both cached table variants outside the timing
+    closed()
+    t_plain, t_closed = time_pair(plain, closed, max(min_time_s, 1.0))
+    row = {
+        "policy": "MW-SneakPeek",
+        "requests": actual_n,
+        "workers": nw,
+        "plain_s": t_plain,
+        "health_s": t_closed,
+        "overhead_pct": (t_closed - t_plain) / t_plain * 100.0,
+    }
+    print(
+        f"[n={actual_n:5d}] health-overhead x{nw} MW-SneakPeek"
+        f" plain {actual_n / t_plain:9.0f} rps | closed-loop"
+        f" {actual_n / t_closed:9.0f} rps | overhead"
+        f" {row['overhead_pct']:+5.2f}%",
+        flush=True,
+    )
+    return row
+
+
 def run_multiworker(sizes, worker_counts, min_time_s=0.2):
     """Eq. 15 placement throughput: scalar loop vs batched utility tiles."""
     rows = []
@@ -388,6 +454,12 @@ def main():
         if args.pipeline and worker_counts
         else []
     )
+    health_row = (
+        run_health_overhead(min(max(pipe_sizes), 1024), min(worker_counts),
+                            min_time_s=min_time_s)
+        if args.pipeline and worker_counts
+        else None
+    )
 
     gate = [
         r for r in rows
@@ -433,6 +505,7 @@ def main():
         "pipeline_multiworker_1024x2_speedup": (
             min(r["speedup"] for r in mw_pipe_gate) if mw_pipe_gate else None
         ),
+        "health_overhead": health_row,
     }
     out = Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
@@ -476,6 +549,15 @@ def main():
         print(
             f"MW-Pipeline {r['policy']} @1024x2 speedup: {sp:.2f}x"
             f" (target >= 1x vs numpy multi-worker fast path) [{status}]"
+        )
+    if health_row is not None:
+        oh = health_row["overhead_pct"]
+        status = "PASS" if oh < 5.0 else "FAIL"
+        failed |= oh >= 5.0
+        print(
+            f"Health/drift overhead @{health_row['requests']}"
+            f"x{health_row['workers']} (no faults): {oh:+.2f}%"
+            f" (target < 5%) [{status}]"
         )
     if failed:
         sys.exit(1)

@@ -95,6 +95,35 @@ def main():
             placed[e.worker] = placed.get(e.worker, 0) + 1
     print(f"  placement: {dict(sorted(placed.items()))} requests per worker")
 
+    print("\nfault-tolerant closed loop: seeded crash + health tracking")
+    from repro.serving import FaultPlan, FaultSpec
+
+    # window=None, batch=None: crash worker 0's FIRST dispatched batch,
+    # whichever window this policy's placement gives it work in.
+    plan = FaultPlan(specs=(FaultSpec(kind="crash", worker=0, window=None,
+                                      batch=None),),
+                     seed=0)
+    ft_srv = EdgeServer(
+        {"assistant": app}, make_policy("LO-EDF"),
+        executor=LMExecutor(variants, new_tokens=3), prompt_fn=prompt_fn,
+        workers=[Worker(0), Worker(1, speed=2.0)],
+        faults=plan, health=True,
+    )
+    reqs = [
+        Request(rid=200 + i, app="assistant", arrival_s=0.01 * i,
+                deadline_s=0.01 * i + 1.0, true_label=int(RNG.integers(2)))
+        for i in range(12)
+    ]
+    _, fstats = ft_srv.run(reqs)
+    print(f"windows: {fstats.windows}  requests: {fstats.requests}  "
+          f"mean utility {fstats.mean_utility:.3f}")
+    print(f"  failed batches={fstats.failed_batches} retries={fstats.retries} "
+          f"dropped={fstats.dropped_after_retry} fallbacks={fstats.fallbacks} "
+          f"quarantined={fstats.quarantined_workers}")
+    ratios = " ".join(f"w{w}={r:.2f}"
+                      for w, r in sorted(fstats.realized_over_profiled.items()))
+    print(f"  realized/profiled EWMA: {ratios}")
+
 
 if __name__ == "__main__":
     main()

@@ -112,6 +112,28 @@ def main():
     print(f"  total swaps={pstats.swaps} "
           f"wall={pool_srv.pool.wall_s*1e3:.1f}ms")
 
+    print("\nclosed loop: transient faults on the fast lane, retries + drift EWMA")
+    from repro.serving import FaultPlan, FaultSpec
+
+    # Worker 1 is 2x faster and takes the placements, so that is the lane
+    # worth faulting: its first two dispatched batches fail and retry.
+    ft_srv = EdgeServer(
+        {"lm": lm_app}, make_policy("LO-EDF"),
+        executor=LMExecutor({"small": (cfg, 0), "big": (cfg, 1)}, new_tokens=2),
+        prompt_fn=prompt_fn, workers=[Worker(0), Worker(1, speed=2.0)],
+        faults=FaultPlan(specs=(FaultSpec(kind="transient", worker=1, count=2),)),
+        health=True,
+    )
+    ft_reqs = [Request(rid=100 + i, app="lm", arrival_s=0.01 * i, deadline_s=1.0,
+                       true_label=i % 2) for i in range(8)]
+    _, fstats = ft_srv.run(ft_reqs)
+    print(f"  requests={fstats.requests} failed_batches={fstats.failed_batches} "
+          f"retries={fstats.retries} dropped={fstats.dropped_after_retry} "
+          f"quarantined={fstats.quarantined_workers}")
+    ratios = " ".join(f"w{w}={r:.2f}"
+                      for w, r in sorted(fstats.realized_over_profiled.items()))
+    print(f"  realized/profiled EWMA: {ratios}")
+
 
 if __name__ == "__main__":
     main()

@@ -24,6 +24,7 @@ from repro.core.fastpath import (
     set_utility_backend,
 )
 from repro.core.grouping import group_by_app, grouped_schedule, split_groups_by_label
+from repro.core.health import HealthConfig, HealthTracker, WorkerHealth
 from repro.core.multiworker import Worker, multiworker_schedule
 from repro.core.pipeline import (
     WindowPipeline,
@@ -61,6 +62,7 @@ __all__ = [
     "WindowArrays", "fast_grouped_schedule", "fast_multiworker_schedule",
     "fast_per_request_schedule", "precompute_windows", "set_utility_backend",
     "grouped_schedule", "group_by_app", "split_groups_by_label",
+    "HealthConfig", "HealthTracker", "WorkerHealth",
     "Worker", "multiworker_schedule",
     "WindowPipeline", "get_pipeline_backend", "pipeline_schedule",
     "set_pipeline_backend",

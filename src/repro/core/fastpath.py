@@ -612,15 +612,20 @@ def placement_pref(
     speeds: np.ndarray,
     wids: Sequence[int],
     pad_to: int | None = None,
+    scale: np.ndarray | None = None,
 ) -> np.ndarray:
     """Flattened (worker, model) candidate preference permutation — THE
     Eq. 15 tie-break after utility: lower scaled latency, then larger
     model name, then lower worker id.  First-max over this order equals
     an argmax under the scalar key (u, -scaled latency, name, -wid).
     ``pad_to`` pads the model axis for the stacked compiled tables
-    (padded candidates pushed last via infinite latency).  The single
-    definition is shared by the numpy fast path and the compiled
-    pipeline so the rule cannot drift between them.
+    (padded candidates pushed last via infinite latency).  ``scale`` is
+    an optional (W, M) drift-correction multiplier on the scaled latency
+    (health tracking's realized/committed EWMA — see ``core.health``),
+    so the tie-break ranks candidates by the CORRECTED latencies the
+    utilities were computed with.  The single definition is shared by
+    the numpy fast path and the compiled pipeline so the rule cannot
+    drift between them.
     """
     m = len(names)
     m_pad = pad_to if pad_to is not None else m
@@ -629,6 +634,8 @@ def placement_pref(
         rank[i] = pos
     slat = np.full((len(speeds), m_pad), np.inf)
     slat[:, :m] = np.asarray(latency_s)[None, :] / np.asarray(speeds)[:, None]
+    if scale is not None:
+        slat[:, :m] *= np.asarray(scale)
     wid_flat = np.repeat(np.asarray(wids), m_pad)
     rank_flat = np.tile(rank, len(speeds))
     return np.lexsort((wid_flat, -rank_flat, slat.ravel())).astype(np.int64)
@@ -657,12 +664,19 @@ class PoolArrays:
     capacity: float  # byte budget (0.0 encodes single-slot)
     gids: dict[str, int]  # model name -> id
     gid_names: list[str]
+    # Drift-correction scales {(wid, model name): s} from core.health —
+    # multiply the scaled latency tables (None: profiled latencies,
+    # bit-identical to the open-loop path).
+    lat_scale: dict | None = None
     _tables: dict = dataclasses.field(default_factory=dict)
 
     @classmethod
-    def build(cls, workers: Sequence, wa: "WindowArrays", state=None, now: float = 0.0):
+    def build(cls, workers: Sequence, wa: "WindowArrays", state=None, now: float = 0.0,
+              lat_scale: Mapping | None = None):
         """Encode ``state`` (or an idle pool at ``now``) against the
-        window's model universe plus any carried resident names."""
+        window's model universe plus any carried resident names.
+        ``lat_scale`` ({(wid, model): s}) applies per-(worker, model)
+        drift-correction multipliers to the scaled latency tables."""
         from repro.core.residency import single_slot_encoding
 
         gids: dict[str, int] = {}
@@ -713,23 +727,50 @@ class PoolArrays:
             capacity=capacity,
             gids=gids,
             gid_names=gid_names,
+            lat_scale=dict(lat_scale) if lat_scale else None,
         )
+
+    def scale_matrix(self, aa: "AppArrays") -> np.ndarray | None:
+        """(W, M) drift-correction multipliers for one application's
+        variants (``None`` when no scale deviates — the bit-identical
+        open-loop path).  Shared by ``app_table`` and the compiled
+        pipeline's table builder so both paths correct identically."""
+        if not self.lat_scale:
+            return None
+        S = np.ones((len(self.workers), len(aa.names)))
+        hit = False
+        for wi, w in enumerate(self.workers):
+            for mi, name in enumerate(aa.names):
+                s = self.lat_scale.get((w.wid, name))
+                if s is not None:
+                    S[wi, mi] = s
+                    hit = True
+        return S if hit else None
 
     def app_table(self, wa: "WindowArrays", app_name: str):
         """Per-(worker, model) scaled tables + the flattened tie-break
         preference order (``placement_pref``) for one application,
-        cached per pool."""
+        cached per pool.  With ``lat_scale`` set, the latency tables (and
+        the tie-break ranking) are multiplied by the per-(worker, model)
+        drift-correction scales; swap latencies are left alone (drift is
+        observed on execution time, residency churn is already exact)."""
         tab = self._tables.get(app_name)
         if tab is None:
             aa = wa.app_arrays[app_name]
             speeds = np.array([w.speed for w in self.workers])
             load_scales = np.array([w.load_scale for w in self.workers])
+            slat_fixed = aa.lat_fixed[None, :] / speeds[:, None]  # (W, M)
+            slat_item = aa.lat_item[None, :] / speeds[:, None]
+            scale = self.scale_matrix(aa)
+            if scale is not None:
+                slat_fixed = slat_fixed * scale
+                slat_item = slat_item * scale
             tab = (
                 aa,
-                aa.lat_fixed[None, :] / speeds[:, None],  # (W, M)
-                aa.lat_item[None, :] / speeds[:, None],
+                slat_fixed,
+                slat_item,
                 aa.swap[None, :] * load_scales[:, None],
-                placement_pref(aa.names, aa.latency_s, speeds, self.wids),
+                placement_pref(aa.names, aa.latency_s, speeds, self.wids, scale=scale),
                 np.asarray([self.gids[n] for n in aa.names], dtype=np.int64),
             )
             self._tables[app_name] = tab
@@ -771,6 +812,8 @@ def fast_multiworker_schedule(
     per_request: bool = False,
     arrays: WindowArrays | None = None,
     state=None,
+    lat_scale: Mapping | None = None,
+    worker_mask=None,
 ) -> Schedule:
     """Vectorized Eq. 15, mirroring ``multiworker.multiworker_schedule``.
 
@@ -788,11 +831,19 @@ def fast_multiworker_schedule(
     same array encoding the compiled pipeline placement consumes; the
     carried ``state`` is read into it (never mutated: scheduling peeks,
     evaluation commits).
+
+    ``lat_scale`` ({(wid, model): s} from ``core.health``) multiplies the
+    per-(worker, model) latency tables by realized/committed drift
+    corrections; ``worker_mask`` (a wid set) restricts placement to the
+    named workers — quarantined lanes simply never enter the
+    ``PoolArrays`` encoding, so no candidate tile ever scores them.
     """
     from repro.core.grouping import group_by_app, split_groups_by_label
 
     if not requests:
         return Schedule()
+    if worker_mask is not None:
+        workers = [w for w in workers if w.wid in worker_mask]
     if not workers:
         raise ValueError("multiworker_schedule requires at least one worker")
     acc_mode = "sharpened" if data_aware else "profiled"
@@ -812,7 +863,7 @@ def fast_multiworker_schedule(
     # different workers, so adjacency buys no swap amortization).
     ordered_groups = ordered_group_items(groups, gp, split_by_label=False)
 
-    pool = PoolArrays.build(workers, wa, state=state, now=now)
+    pool = PoolArrays.build(workers, wa, state=state, now=now, lat_scale=lat_scale)
     orders = {w.wid: 1 for w in workers}
     entries: list[ScheduleEntry] = []
 

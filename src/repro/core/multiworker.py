@@ -58,11 +58,18 @@ def multiworker_schedule(
     fastpath: bool = True,
     state=None,
     arrays=None,
+    lat_scale=None,
+    worker_mask=None,
 ) -> Schedule:
     """Greedy grouped scheduling over heterogeneous workers (Eq. 15).
 
     ``per_request=True`` degrades grouping to singletons — the
     locally-optimal multi-worker baseline of Fig. 15.
+
+    ``worker_mask`` (a wid set, from health tracking) restricts placement
+    to the named workers on both paths; ``lat_scale`` ({(wid, model): s}
+    drift corrections) multiplies the fast path's latency tables and is
+    rejected on the scalar reference (which has no table to correct).
 
     ``fastpath`` (default) delegates to the vectorized implementation in
     ``repro.core.fastpath``, which scores every (worker, model) candidate
@@ -93,7 +100,15 @@ def multiworker_schedule(
             per_request=per_request,
             arrays=arrays,
             state=state,
+            lat_scale=lat_scale,
+            worker_mask=worker_mask,
         )
+    if lat_scale:
+        raise ValueError("lat_scale drift correction requires the fastpath")
+    if worker_mask is not None:
+        workers = [w for w in workers if w.wid in worker_mask]
+        if not workers:
+            raise ValueError("worker_mask excludes every worker")
     acc_mode = "sharpened" if data_aware else "profiled"
     if per_request:
         groups = {f"r{r.rid}": [r] for r in requests}

@@ -463,11 +463,19 @@ class WindowPipeline:
         state=None,
         arrays: WindowArrays | None = None,
         workers=None,
+        lat_scale=None,
+        worker_mask=None,
     ) -> Schedule:
         """Schedule one window through the compiled programs (decision-
         identical to the numpy fast path; falls back to it on the numpy
         backend).  ``state`` seeds carried backlog/residency; ``workers``
-        routes through the compiled Eq. 15 placement program."""
+        routes through the compiled Eq. 15 placement program.
+
+        ``lat_scale`` ({(wid, model): s} drift corrections from
+        ``core.health``) multiplies the compiled latency tables;
+        ``worker_mask`` (a wid set) drops quarantined workers from the
+        pool encoding before the placement scan — both multi-worker only
+        (the single-worker programs have no pool to mask)."""
         policy = policy if policy is not None else self.policy
         if policy is None:
             raise ValueError("WindowPipeline needs a policy (init arg or call arg)")
@@ -475,15 +483,21 @@ class WindowPipeline:
         t0 = time.perf_counter()
         if not requests:
             return Schedule()
+        if (lat_scale or worker_mask is not None) and not workers:
+            raise ValueError("lat_scale/worker_mask require a multi-worker pipeline")
         backend = self.resolved_backend()
         if workers:
+            if worker_mask is not None:
+                workers = [w for w in workers if w.wid in worker_mask]
+                if not workers:
+                    raise ValueError("worker_mask excludes every worker")
             if backend == "numpy":
                 sched = self._schedule_multiworker_numpy(
-                    policy, requests, now, workers, state, arrays
+                    policy, requests, now, workers, state, arrays, lat_scale
                 )
             else:
                 sched = self._schedule_multiworker_jax(
-                    policy, requests, now, workers, state, arrays
+                    policy, requests, now, workers, state, arrays, lat_scale
                 )
         elif backend == "numpy":
             # The decision-identical numpy fast path.
@@ -495,7 +509,8 @@ class WindowPipeline:
         sched.scheduling_overhead_s = time.perf_counter() - t0
         return sched
 
-    def _schedule_multiworker_numpy(self, policy, requests, now, workers, state, arrays):
+    def _schedule_multiworker_numpy(self, policy, requests, now, workers, state,
+                                    arrays, lat_scale=None):
         from repro.core.fastpath import fast_multiworker_schedule
 
         return fast_multiworker_schedule(
@@ -505,6 +520,7 @@ class WindowPipeline:
             per_request=not policy.grouped,
             arrays=arrays,
             state=state,
+            lat_scale=lat_scale,
         )
 
     def _schedule_numpy(self, policy, requests, now, state, arrays):
@@ -608,13 +624,22 @@ class WindowPipeline:
         (application set, pool signature).  The per-app tables come from
         ``PoolArrays.app_table`` (padded to M_max here), so the scaling
         math and the tie-break rule have exactly one definition shared
-        with the numpy fast path."""
+        with the numpy fast path.  The drift-correction scales
+        (``pool.lat_scale`` — already quantized by ``core.health``) are
+        part of the cache key, so a converged EWMA reuses its tables
+        while a still-moving one rebuilds them (bounded by the LRU)."""
         app_names = list(wa.req_idx)
         aas = [wa.app_arrays[n] for n in app_names]
+        scale_key = (
+            tuple(sorted((wid, name, float(s))
+                         for (wid, name), s in pool.lat_scale.items()))
+            if pool.lat_scale else None
+        )
         key = (
             "mw",
             tuple(id(a) for a in aas),
             tuple((w.wid, w.speed, w.load_scale) for w in workers),
+            scale_key,
         )
         ent = _TABLES.get(key)
         if ent is not None:
@@ -642,9 +667,11 @@ class WindowPipeline:
             gid_tab[ai, :m] = gid_row
             valid_tab[ai, :m] = True
             pen_tab[ai] = _PENALTY_ID[aa.app.penalty]
-            # The shared Eq. 15 tie-break permutation, padded to m_max.
+            # The shared Eq. 15 tie-break permutation, padded to m_max —
+            # ranked by the same drift-corrected latencies as app_table.
             pref_tab[ai] = placement_pref(
-                aa.names, aa.latency_s, speeds, pool.wids, pad_to=m_max
+                aa.names, aa.latency_s, speeds, pool.wids, pad_to=m_max,
+                scale=pool.scale_matrix(aa),
             )
         ent = {
             "pin": aas,  # strong refs keep the id key sound
@@ -663,7 +690,8 @@ class WindowPipeline:
             _TABLES.pop(next(iter(_TABLES)))
         return ent
 
-    def _schedule_multiworker_jax(self, policy, requests, now, workers, state, arrays):
+    def _schedule_multiworker_jax(self, policy, requests, now, workers, state,
+                                  arrays, lat_scale=None):
         from repro.core.fastpath import PoolArrays
         from repro.core.grouping import group_by_app, split_groups_by_label
 
@@ -687,7 +715,7 @@ class WindowPipeline:
         # The fast path's multi-worker ordering rule, shared verbatim.
         ordered_groups = ordered_group_items(groups, gp, split_by_label=False)
 
-        pool = PoolArrays.build(workers, wa, state=state, now=now)
+        pool = PoolArrays.build(workers, wa, state=state, now=now, lat_scale=lat_scale)
         tab = self._mw_tables(wa, workers, pool)
         app_pos = {name: ai for ai, name in enumerate(tab["app_names"])}
         m_max = tab["m_max"]
@@ -938,10 +966,14 @@ def pipeline_schedule(
     arrays: WindowArrays | None = None,
     backend: str | None = None,
     workers=None,
+    lat_scale=None,
+    worker_mask=None,
 ) -> Schedule:
     """One pipelined window pass for ``SchedulerPolicy.schedule`` /
     ``schedule_window`` (``workers`` selects the Eq. 15 placement
-    program)."""
+    program; ``lat_scale``/``worker_mask`` the closed-loop drift
+    corrections and health masking — multi-worker only)."""
     return WindowPipeline(apps, policy=policy, backend=backend, workers=workers).schedule(
-        requests, now, state=state, arrays=arrays
+        requests, now, state=state, arrays=arrays,
+        lat_scale=lat_scale, worker_mask=worker_mask,
     )

@@ -205,6 +205,8 @@ def schedule_window(
     workers=None,
     state=None,
     arrays=None,
+    lat_scale=None,
+    worker_mask=None,
 ) -> tuple[Schedule, Mapping[str, Application]]:
     """One scheduling-window pass: SneakPeek stage (if any) then the policy.
 
@@ -215,8 +217,11 @@ def schedule_window(
     ungrouped policies) — or from the compiled Eq. 15 placement program
     (``repro.core.pipeline``) when the policy has ``pipeline=True``.
     ``state`` carries streaming backlog + residency; ``arrays`` a
-    precomputed ``fastpath.WindowArrays``.  Returns the schedule and the
-    (possibly short-circuit-augmented) application map.
+    precomputed ``fastpath.WindowArrays``.  ``lat_scale`` ({(wid, model):
+    scale} realized/profiled drift corrections) and ``worker_mask`` (a
+    wid set from health tracking; quarantined workers are excluded from
+    placement) apply to the multi-worker paths only.  Returns the
+    schedule and the (possibly short-circuit-augmented) application map.
 
     Re-admission (window-close preemption): requests withdrawn by
     ``StreamingState.preempt`` and merged back through
@@ -239,6 +244,7 @@ def schedule_window(
             sched = pipeline_schedule(
                 policy, requests, eff_apps, now,
                 state=state, arrays=arrays, workers=workers,
+                lat_scale=lat_scale, worker_mask=worker_mask,
             )
             return sched, eff_apps
         from repro.core.multiworker import multiworker_schedule
@@ -255,7 +261,11 @@ def schedule_window(
             fastpath=policy.fastpath,
             state=state,
             arrays=arrays,
+            lat_scale=lat_scale,
+            worker_mask=worker_mask,
         )
         sched.scheduling_overhead_s = time.perf_counter() - t0
         return sched, eff_apps
+    if lat_scale or worker_mask is not None:
+        raise ValueError("lat_scale/worker_mask require a multi-worker pool")
     return policy.schedule(requests, eff_apps, now, state=state, arrays=arrays), eff_apps

@@ -228,6 +228,44 @@ class StreamingState:
             sorted(expired, key=lambda r: (r.arrival_s, r.rid)),
         )
 
+    def withdraw(self, rids) -> list[Request]:
+        """Remove the backlog batches containing any of ``rids`` — the
+        per-batch generalization of ``preempt`` used when execution
+        FAILED (lane fault / injected fault), so dispatch marks and
+        committed start times do not protect them.
+
+        Per worker, the maximal contiguous TAIL of failed batches is
+        popped with the exact ``preempt``-style rollback (busy-until time
+        and LRU residency restored to the pre-batch snapshot — exact
+        because execution is sequential, so a popped tail leaves the
+        remaining commitments untouched).  Failed batches in the MIDDLE
+        of a queue — a transient with later successful work behind it —
+        are removed from the log only: the lane really burned the slot,
+        so the conservative choice keeps the committed busy-until time.
+
+        Returns the member requests of every removed batch, sorted by
+        (arrival, rid) for deterministic re-admission."""
+        wanted = set(rids)
+        removed: list[Request] = []
+        for wid, batches in self.backlog.items():
+            tl = self.timelines.get(wid)
+            # Exact tail rollback first (crash cascades are tails).
+            while batches and wanted.intersection(batches[-1].rids):
+                b = batches.pop()
+                removed.extend(b.requests)
+                if tl is not None:
+                    tl.t = b.t_before
+                    tl._resident = list(b.residency_before)
+            # Mid-queue removals: log-only (no timeline rollback).
+            keep = []
+            for b in batches:
+                if wanted.intersection(b.rids):
+                    removed.extend(b.requests)
+                else:
+                    keep.append(b)
+            self.backlog[wid] = keep
+        return sorted(removed, key=lambda r: (r.arrival_s, r.rid))
+
     def backlog_s(self, now: float) -> float:
         """Worst-case carried backlog: how far the busiest worker's
         busy-until time extends past ``now`` (0 when all are idle)."""

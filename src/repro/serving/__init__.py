@@ -1,8 +1,11 @@
+from repro.serving.faults import FaultInjector, FaultPlan, FaultSpec
 from repro.serving.profiles import lm_latency_model, lm_profile, load_dryrun_record
 from repro.serving.runtime import (
+    BatchFailure,
     ExecutionReport,
     ExecutorPool,
     LMExecutor,
+    PoolOutcome,
     SwapManager,
     WindowQueue,
     WorkerExecutor,
@@ -13,5 +16,7 @@ __all__ = [
     "lm_latency_model", "lm_profile", "load_dryrun_record",
     "ExecutionReport", "LMExecutor", "SwapManager", "WindowQueue",
     "WorkerExecutor", "ExecutorPool",
+    "BatchFailure", "PoolOutcome",
+    "FaultSpec", "FaultPlan", "FaultInjector",
     "EdgeServer", "ServeStats",
 ]

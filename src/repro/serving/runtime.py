@@ -13,6 +13,7 @@ import dataclasses
 import time
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Callable, Mapping, Optional, Sequence
 
 import jax
@@ -29,6 +30,8 @@ __all__ = [
     "SwapManager",
     "LMExecutor",
     "ExecutionReport",
+    "BatchFailure",
+    "PoolOutcome",
     "WorkerExecutor",
     "ExecutorPool",
 ]
@@ -123,11 +126,46 @@ class ExecutionReport:
     decode_s: float
     tokens: np.ndarray  # (B, new_tokens) generated ids
     predictions: list  # per-request predicted class (argmax over option logits)
+    worker: int = -1  # lane that executed the batch (-1: single-executor path)
 
     @property
     def total_s(self) -> float:
         """Swap + prefill + decode seconds for the batch."""
         return self.swap_s + self.prefill_s + self.decode_s
+
+
+@dataclasses.dataclass
+class BatchFailure:
+    """One batch that did NOT execute successfully on its lane.
+
+    ``kind`` is an injected fault kind (``crash``/``transient``/
+    ``swap_fail``), ``"error"`` for a real exception caught by the
+    per-batch guard, or ``"lane"`` for a lane-level failure outside it.
+    ``cascaded`` marks batches failed only because an earlier crash
+    killed their lane (not independent failure evidence)."""
+
+    worker: int
+    request_ids: list
+    model: str
+    kind: str
+    batch_index: int = -1
+    cascaded: bool = False
+    error: str = ""
+
+
+@dataclasses.dataclass
+class PoolOutcome:
+    """Everything ``execute_supervised`` gathered from the lanes: the
+    successful reports, the failed batches, and the lanes that blew the
+    deadline timeout (joined late; a health signal, not lost work)."""
+
+    reports: list
+    failures: list
+    timed_out: list
+
+    def failed_rids(self) -> set[int]:
+        """Request ids of every failed batch (for withdrawal/retry)."""
+        return {rid for f in self.failures for rid in f.request_ids}
 
 
 class LMExecutor:
@@ -275,6 +313,9 @@ class WorkerExecutor:
         class_token_ids=None,
         until: float | None = None,
         on_dispatch: Callable[[list[int]], None] | None = None,
+        injector=None,
+        window: int = 0,
+        failures: list | None = None,
     ) -> list[ExecutionReport]:
         """Run this worker's share of a placed schedule, batch by batch.
 
@@ -284,16 +325,58 @@ class WorkerExecutor:
         window — the half of the schedule window-close preemption may
         withdraw).  ``on_dispatch(rids)`` fires as each batch begins,
         BEFORE execution — the serving loop uses it to set the streaming
-        state's dispatch marks so started work is never withdrawn."""
+        state's dispatch marks so started work is never withdrawn.
+
+        ``injector`` (serving.faults.FaultInjector) is polled per batch
+        index within ``window``; ``failures`` (a list the supervised pool
+        path passes in) collects ``BatchFailure`` records — injected
+        faults AND real per-batch exceptions — instead of raising, so one
+        bad batch never takes down the lane's remaining work.  Without a
+        ``failures`` sink (the legacy path) exceptions propagate as
+        before.  A crash fault stops the lane: its batch and every later
+        batch fail (later ones marked ``cascaded``).  A hang fault runs
+        the batch and inflates its reported decode seconds by the fault's
+        ``delay_s`` — no real sleep; the straggler signal flows through
+        the realized-latency EWMA exactly like a genuinely slow lane."""
+        if injector is not None and failures is None:
+            raise ValueError("fault injection requires a failures sink "
+                             "(use ExecutorPool.execute_supervised)")
         reports = []
-        for batch in iter_entry_batches(sorted(entries, key=lambda e: e.order)):
+        wid = self.worker.wid
+        crashed = False
+        for bi, batch in enumerate(iter_entry_batches(sorted(entries, key=lambda e: e.order))):
             if until is not None and batch[0].est_start_s >= until - 1e-12:
                 break
+            rids = [e.request.rid for e in batch]
+            if crashed:
+                failures.append(BatchFailure(
+                    worker=wid, request_ids=rids, model=batch[0].model,
+                    kind="crash", batch_index=bi, cascaded=True))
+                continue
+            fault = injector.poll(window, wid, bi, rids) if injector is not None else None
+            if fault is not None and fault.kind in ("crash", "transient", "swap_fail"):
+                failures.append(BatchFailure(
+                    worker=wid, request_ids=rids, model=batch[0].model,
+                    kind=fault.kind, batch_index=bi))
+                crashed = fault.kind == "crash"
+                continue
             if on_dispatch is not None:
-                on_dispatch([e.request.rid for e in batch])
-            report = self._scaled(
-                self.executor.run_entry_batch(batch, prompt_fn, class_token_ids)
-            )
+                on_dispatch(rids)
+            try:
+                report = self._scaled(
+                    self.executor.run_entry_batch(batch, prompt_fn, class_token_ids)
+                )
+            except Exception as err:
+                if failures is None:
+                    raise
+                failures.append(BatchFailure(
+                    worker=wid, request_ids=rids, model=batch[0].model,
+                    kind="error", batch_index=bi, error=repr(err)))
+                continue
+            if fault is not None and fault.kind == "hang":
+                report = dataclasses.replace(
+                    report, decode_s=report.decode_s + fault.delay_s)
+            report.worker = wid
             self.busy_s += report.total_s
             reports.append(report)
         return reports
@@ -371,15 +454,14 @@ class ExecutorPool:
         invoked from multiple lane threads at once — unlike the
         sequential single-``LMExecutor`` path, they must be thread-safe
         (derive any randomness from the request, e.g. its rid, rather
-        than mutating one shared generator)."""
-        by_worker: dict[int, list[ScheduleEntry]] = {}
-        for e in schedule.sorted_entries():
-            by_worker.setdefault(e.worker, []).append(e)
-        unknown = set(by_worker) - set(self.lanes)
-        if unknown:
-            raise KeyError(f"schedule places work on unpooled workers {sorted(unknown)}")
-        if self._tp is None:
-            self._tp = ThreadPoolExecutor(max_workers=len(self.lanes))
+        than mutating one shared generator).
+
+        Every lane outcome is gathered before anything is raised: one
+        lane's exception no longer leaves the other lanes' futures
+        undrained or skips the ``wall_s`` accounting — the first failing
+        lane's error (ascending worker id) is re-raised only after every
+        lane has been joined."""
+        by_worker = self._split(schedule)
         t0 = time.perf_counter()
         futures = {
             wid: self._tp.submit(
@@ -388,9 +470,105 @@ class ExecutorPool:
             )
             for wid, entries in by_worker.items()
         }
-        reports = [r for wid in sorted(futures) for r in futures[wid].result()]
+        results: dict[int, list[ExecutionReport]] = {}
+        errors: dict[int, BaseException] = {}
+        for wid in sorted(futures):
+            try:
+                results[wid] = futures[wid].result()
+            except BaseException as err:  # gather-all: re-raised below
+                errors[wid] = err
         self.wall_s += time.perf_counter() - t0
-        return reports
+        if errors:
+            raise errors[min(errors)]
+        return [r for wid in sorted(results) for r in results[wid]]
+
+    def _split(self, schedule: Schedule) -> dict[int, list[ScheduleEntry]]:
+        """Entries per worker id (schedule order), lanes validated and
+        the lane thread pool materialized."""
+        by_worker: dict[int, list[ScheduleEntry]] = {}
+        for e in schedule.sorted_entries():
+            by_worker.setdefault(e.worker, []).append(e)
+        unknown = set(by_worker) - set(self.lanes)
+        if unknown:
+            raise KeyError(f"schedule places work on unpooled workers {sorted(unknown)}")
+        if self._tp is None:
+            self._tp = ThreadPoolExecutor(max_workers=len(self.lanes))
+        return by_worker
+
+    def execute_supervised(
+        self,
+        schedule: Schedule,
+        prompt_fn: Callable[[Request], np.ndarray],
+        class_token_ids=None,
+        until: float | None = None,
+        on_dispatch: Callable[[list[int]], None] | None = None,
+        injector=None,
+        window: int = 0,
+        timeout_s: float | None = None,
+    ) -> PoolOutcome:
+        """Supervised lane execution: the fault-tolerant twin of
+        ``execute_schedule``.
+
+        Each lane runs with a per-batch failure guard (and the optional
+        fault ``injector``, polled per (window, worker, batch)): injected
+        faults and real exceptions become ``BatchFailure`` records
+        instead of raising, so one bad batch never loses the rest of the
+        pool's window.  ``timeout_s`` bounds the wait for the WHOLE
+        pool's lanes (a shared deadline from dispatch): a lane that blows
+        it is recorded in ``timed_out`` — a health signal — and then
+        hard-joined (Python threads cannot be cancelled; the wait just
+        stops masking the straggler).  A lane-level exception outside the
+        per-batch guard fails the lane's not-yet-accounted batches with
+        kind ``"lane"``.
+
+        Returns a ``PoolOutcome``; the serving loop withdraws
+        ``failed_rids()`` via ``StreamingState.withdraw`` and re-admits
+        them under its retry budget."""
+        by_worker = self._split(schedule)
+        failures_by: dict[int, list[BatchFailure]] = {wid: [] for wid in by_worker}
+        t0 = time.perf_counter()
+        futures = {
+            wid: self._tp.submit(
+                self.lanes[wid].execute, entries, prompt_fn,
+                class_token_ids, until, on_dispatch,
+                injector, window, failures_by[wid],
+            )
+            for wid, entries in by_worker.items()
+        }
+        reports: list[ExecutionReport] = []
+        failures: list[BatchFailure] = []
+        timed_out: list[int] = []
+        deadline = None if timeout_s is None else t0 + timeout_s
+        for wid in sorted(futures):
+            lane_reports: list[ExecutionReport] = []
+            try:
+                if deadline is None:
+                    lane_reports = futures[wid].result()
+                else:
+                    remaining = max(0.0, deadline - time.perf_counter())
+                    try:
+                        lane_reports = futures[wid].result(timeout=remaining)
+                    except FuturesTimeout:
+                        timed_out.append(wid)
+                        lane_reports = futures[wid].result()  # hard join
+            except Exception as err:
+                # Lane-level failure outside the per-batch guard: every
+                # batch not already reported or failed goes down with it.
+                done = {rid for f in failures_by[wid] for rid in f.request_ids}
+                for rep in lane_reports:
+                    done.update(rep.request_ids)
+                for bi, batch in enumerate(iter_entry_batches(
+                        sorted(by_worker[wid], key=lambda e: e.order))):
+                    rids = [e.request.rid for e in batch]
+                    if not done.intersection(rids):
+                        failures_by[wid].append(BatchFailure(
+                            worker=wid, request_ids=rids, model=batch[0].model,
+                            kind="lane", batch_index=bi, error=repr(err)))
+                lane_reports = []
+            reports.extend(lane_reports)
+            failures.extend(failures_by[wid])
+        self.wall_s += time.perf_counter() - t0
+        return PoolOutcome(reports=reports, failures=failures, timed_out=timed_out)
 
 
 def iter_entry_batches(entries: Sequence[ScheduleEntry]):

@@ -56,6 +56,19 @@ class ServeStats:
     # dropped request keeps a recorded violation and zero utility).
     preempted: int = 0
     dropped: int = 0
+    # Fault-tolerant closed loop (``faults``/``health``): batch failures
+    # observed on the lanes, failed requests re-admitted for retry,
+    # requests dropped after exhausting the retry budget (or their
+    # deadline), retries whose original variant no longer fit the
+    # remaining slack (the accuracy-scaling fallback path), workers
+    # currently quarantined, and the per-worker realized/committed
+    # latency-ratio EWMA driving drift correction.
+    failed_batches: int = 0
+    retries: int = 0
+    dropped_after_retry: int = 0
+    fallbacks: int = 0
+    quarantined_workers: int = 0
+    realized_over_profiled: dict = dataclasses.field(default_factory=dict)
 
     @property
     def worker_utilization(self) -> dict:
@@ -91,6 +104,10 @@ class EdgeServer:
         memory_capacity_bytes: int | None = None,
         pipeline: bool = False,
         preempt: bool = False,
+        faults=None,
+        health=False,
+        retry_budget: int = 2,
+        lane_timeout_s: float | None = None,
     ):
         """``workers`` (a sequence of ``core.multiworker.Worker``) switches
         scheduling to §VII multi-worker placement; without it the policy
@@ -114,7 +131,20 @@ class EdgeServer:
         and pool state; withdrawn entries already past their deadline are
         dropped with a recorded violation.  Off by default — with
         ``preempt=False`` every scheduling decision is bit-identical to
-        the non-preemptive server."""
+        the non-preemptive server.
+
+        ``faults`` (a ``serving.faults.FaultPlan`` or ``FaultInjector``)
+        and/or ``health`` (True, or a ``core.health.HealthTracker``)
+        switch execution to the fault-tolerant closed loop: lanes run
+        under ``ExecutorPool.execute_supervised`` (per-batch fault
+        isolation + the ``lane_timeout_s`` shared deadline), failed
+        batches are withdrawn from the committed timelines
+        (``StreamingState.withdraw``) and re-admitted with exponential
+        backoff up to ``retry_budget`` retries (then dropped with a
+        recorded violation), and the tracker's realized/committed EWMA
+        feeds latency-scale drift corrections and quarantine masks back
+        into the next window's scheduling.  Both default off; the
+        defaults leave every existing path bit-identical."""
         self.apps = dict(apps)
         self.policy = policy
         self.executor = executor
@@ -144,6 +174,37 @@ class EdgeServer:
             )
         elif isinstance(executor, ExecutorPool):
             raise ValueError("ExecutorPool requires workers=[...] placement")
+        self.retry_budget = int(retry_budget)
+        self.lane_timeout_s = lane_timeout_s
+        self.injector = None
+        if faults is not None:
+            from repro.serving.faults import FaultInjector, FaultPlan
+
+            self.injector = (
+                FaultInjector(faults) if isinstance(faults, FaultPlan) else faults
+            )
+        self.health = None
+        if health:
+            from repro.core.health import HealthTracker
+
+            if isinstance(health, HealthTracker):
+                self.health = health
+            else:
+                wids = [w.wid for w in self.workers] if self.workers else [0]
+                self.health = HealthTracker(wids)
+        self._closed_loop = self.injector is not None or self.health is not None
+        if self._closed_loop and self.pool is None:
+            raise ValueError(
+                "faults/health require workers=[...] and an executor "
+                "(the closed loop supervises ExecutorPool lanes)"
+            )
+        # Accounting unit: per-request records whenever work can be
+        # re-scheduled (preemption OR the closed loop's retries), so a
+        # retried request overwrites rather than double-counts.
+        self._use_records = self.preempt or self._closed_loop
+        self._window_index = 0
+        self._attempts: dict[int, int] = {}
+        self._retry_ready: list[tuple[float, Request]] = []
         # Streaming state: per-worker backlog + model residency carried
         # across windows (scheduling peeks it, evaluation commits to it).
         self.state = StreamingState(
@@ -198,11 +259,11 @@ class EdgeServer:
         """Fold one evaluated window into the aggregate stats.
 
         Non-preemptive servers accumulate sums directly (a request is
-        scheduled exactly once).  Preemptive servers keep per-request
-        records instead: a re-scheduled request overwrites its earlier
-        (stale) utility/violation, so totals always reflect the LAST
-        commitment for each request."""
-        if not self.preempt:
+        scheduled exactly once).  Preemptive and closed-loop servers keep
+        per-request records instead: a re-scheduled (or retried) request
+        overwrites its earlier (stale) utility/violation, so totals
+        always reflect the LAST commitment for each request."""
+        if not self._use_records:
             self.stats.requests += len(res.utilities)
             self.stats.violations += res.violations
             self._utility_sum += res.utilities.sum()
@@ -213,21 +274,41 @@ class EdgeServer:
             self._set_record(e.request.rid, float(u), bool(miss))
 
     def run_window(self, now: float):
-        """Close the current window: (optionally) preempt, schedule,
-        commit, and execute."""
+        """Close the current window: (optionally) preempt, re-admit due
+        retries, schedule (drift-corrected, health-masked), commit, and
+        execute (supervised when the closed loop is on)."""
+        widx = self._window_index
+        self._window_index += 1
         if self.preempt:
             self._preempt_window(now)
+        if self._retry_ready:
+            # Backed-off retries whose ready time has arrived re-enter
+            # through the queue like preempted work.
+            due = [r for t, r in self._retry_ready if t <= now]
+            if due:
+                self._retry_ready = [(t, r) for t, r in self._retry_ready if t > now]
+                self.queue.readmit(sorted(due, key=lambda r: (r.arrival_s, r.rid)))
         requests = self.queue.drain_window(now)
         if not requests:
+            self._close_health_window()
             return None
         from repro.core.sneakpeek import attach_sneakpeek
 
+        lat_scale = mask = scale_fn = None
+        if self.health is not None:
+            scale_fn = self.health.scale_fn()
+            if self.workers:
+                lat_scale = self.health.latency_scale()
+                mask = self.health.active_wids(self.workers)
         if self._pipeline is not None:
             # Fused data plane: batched ingest + compiled window program
             # (reused across windows), peeking the carried state.  Ingest
             # skips re-admitted requests (evidence drawn once).
             self._pipeline.ingest(requests)
-            sched = self._pipeline.schedule(requests, now, state=self.state)
+            sched = self._pipeline.schedule(
+                requests, now, state=self.state,
+                lat_scale=lat_scale, worker_mask=mask,
+            )
             eff_apps = self._eff_apps
         else:
             if self.sneakpeeks:
@@ -235,8 +316,12 @@ class EdgeServer:
             sched, eff_apps = schedule_window(
                 self.policy, requests, self._eff_apps, now,
                 workers=self.workers, state=self.state,
+                lat_scale=lat_scale, worker_mask=mask,
             )
-        res = evaluate(sched, eff_apps, now, acc_mode="oracle", state=self.state)
+        res = evaluate(
+            sched, eff_apps, now, acc_mode="oracle", state=self.state,
+            latency_scale=scale_fn,
+        )
         self.stats.windows += 1
         self._account(sched, res)
         self.stats.scheduling_overhead_s += sched.scheduling_overhead_s
@@ -250,7 +335,27 @@ class EdgeServer:
         )
 
         reports = None
-        if self.pool is not None and self.prompt_fn is not None:
+        outcome = None
+        if self._closed_loop and self.prompt_fn is not None:
+            # Supervised execution plane: per-batch fault isolation, lane
+            # deadline, and the failure records the retry loop consumes.
+            t1 = time.perf_counter()
+            outcome = self.pool.execute_supervised(
+                sched,
+                self.prompt_fn,
+                until=now + self.queue.window_s if self.preempt else None,
+                on_dispatch=self.state.mark_dispatched if self.preempt else None,
+                injector=self.injector,
+                window=widx,
+                timeout_s=self.lane_timeout_s,
+            )
+            self.stats.swaps = sum(self.pool.swap_counts.values())
+            self.stats.worker_swaps = dict(self.pool.swap_counts)
+            self.stats.pool_busy_s = dict(self.pool.busy_s)
+            self.stats.wall_s += time.perf_counter() - t1
+            self._absorb_outcome(outcome, sched, now)
+            reports = outcome.reports
+        elif self.pool is not None and self.prompt_fn is not None:
             # Multi-worker execution plane: each lane runs its share of
             # the placed schedule concurrently.  With preemption on, only
             # batches committed to start inside the upcoming window are
@@ -272,7 +377,77 @@ class EdgeServer:
             reports = self.executor.execute_schedule(sched, self.prompt_fn)
             self.stats.swaps = self.executor.swaps.swap_count
             self.stats.wall_s += time.perf_counter() - t1
-        return {"schedule": sched, "eval": res, "reports": reports}
+        self._close_health_window()
+        return {"schedule": sched, "eval": res, "reports": reports, "outcome": outcome}
+
+    def _close_health_window(self) -> None:
+        """Tick the health tracker at window close: quarantine cooldowns
+        count down (released workers re-probe) and the fault/drift stats
+        snapshot refreshes."""
+        if self.health is None:
+            return
+        self.health.close_window()
+        self.stats.quarantined_workers = len(self.health.quarantined())
+        self.stats.realized_over_profiled = self.health.ratio_snapshot()
+
+    def _absorb_outcome(self, outcome, sched, now: float) -> None:
+        """Fold one supervised window back into the closed loop.
+
+        Successful reports feed the drift EWMA (realized vs committed
+        latency per (worker, model)); failures and lane timeouts feed the
+        health state machine; every failed request's batch is withdrawn
+        from the committed timelines and sent through ``_retry``."""
+        ent_by_rid = {e.request.rid: e for e in sched.sorted_entries()}
+        if self.health is not None:
+            for rep in outcome.reports:
+                if not rep.request_ids:
+                    continue
+                e = ent_by_rid.get(rep.request_ids[0])
+                if e is not None and rep.worker >= 0:
+                    self.health.observe(rep.worker, rep.model, rep.total_s, e.est_latency_s)
+            for wid in outcome.timed_out:
+                self.health.record_failure(wid, "timeout")
+        failed_model: dict[int, str] = {}
+        for f in outcome.failures:
+            self.stats.failed_batches += 1
+            if self.health is not None and not f.cascaded:
+                self.health.record_failure(f.worker, f.kind)
+            for rid in f.request_ids:
+                failed_model[rid] = f.model
+        if not failed_model:
+            return
+        removed = self.state.withdraw(set(failed_model))
+        for r in removed:
+            self._retry(r, failed_model.get(r.rid, ""), now)
+
+    def _retry(self, r: Request, model: str, now: float) -> None:
+        """Deadline-aware retry with accuracy-scaling fallback.
+
+        The request is dropped (recorded violation, zero utility) when its
+        deadline passed, the retry budget is spent, or even the cheapest
+        variant cannot finish in the remaining slack.  Otherwise it is
+        re-admitted after an exponential backoff
+        (``(2**(attempts-1) - 1) * window_s``); if the ORIGINAL variant no
+        longer fits the slack, the re-schedule will naturally prefer a
+        cheaper (lower-accuracy) one — counted as a fallback."""
+        attempts = self._attempts.get(r.rid, 0) + 1
+        self._attempts[r.rid] = attempts
+        app = self._eff_apps[r.app]
+        min_lat = min(m.latency_s for m in app.models)
+        if (
+            r.deadline_s <= now
+            or attempts > self.retry_budget
+            or now + min_lat > r.deadline_s
+        ):
+            self._set_record(r.rid, 0.0, True)
+            self.stats.dropped_after_retry += 1
+            return
+        orig = next((m for m in app.models if m.name == model), None)
+        if orig is not None and now + orig.latency_s > r.deadline_s:
+            self.stats.fallbacks += 1
+        self.stats.retries += 1
+        backoff = (2 ** (attempts - 1) - 1) * self.queue.window_s
+        self._retry_ready.append((now + backoff, r))
 
     def run(self, requests, horizon_s: float | None = None):
         """Feed a request trace through windowed scheduling.
@@ -295,13 +470,20 @@ class EdgeServer:
             out = self.run_window(w * self.queue.window_s)
             if out:
                 outs.append(out)
-        if self.preempt and self.pool is not None and self.prompt_fn is not None:
+        if (
+            (self.preempt or self._closed_loop)
+            and self.pool is not None
+            and self.prompt_fn is not None
+        ):
             # Flush: each extra close withdraws/re-schedules the
-            # still-undispatched tail and dispatches what now starts
-            # inside the next window.  The committed horizon is finite,
-            # so this terminates; the cap is a safety net only.
+            # still-undispatched tail (preempt), re-admits due retries
+            # (closed loop), and dispatches what now starts inside the
+            # next window.  Retry budgets and the committed horizon are
+            # finite, so this terminates; the cap is a safety net only.
             while (
-                len(self.queue) or self.state.undispatched_backlog()
+                len(self.queue)
+                or self._retry_ready
+                or (self.preempt and self.state.undispatched_backlog())
             ) and w < n_windows + 10_000:
                 w += 1
                 out = self.run_window(w * self.queue.window_s)

@@ -1,0 +1,502 @@
+"""Fault-tolerant closed-loop serving (robustness tentpole).
+
+Covers the contract of the fault-injection harness, per-batch lane
+supervision, the ``StreamingState.withdraw`` rollback, the health state
+machine + quarantine masking, and the realized-latency drift correction:
+
+  * ``FaultInjector.poll`` is deterministic in (seed, window, worker,
+    batch) and honors per-spec fire counts;
+  * ``ExecutorPool.execute_schedule`` gathers EVERY lane outcome before
+    re-raising (one lane's exception never skips another's work);
+  * ``execute_supervised`` converts injected faults and real exceptions
+    into ``BatchFailure`` records instead of raising;
+  * a crash mid-window loses no request: failed batches roll back
+    exactly and every rid lands in the server's records exactly once;
+  * retry exhaustion drops with a recorded violation and zero utility,
+    exactly once per rid;
+  * a straggler lane is quarantined (masked out of both the numpy fast
+    path and the compiled Eq. 15 pipeline) and re-probed after cooldown;
+  * with the injector off (or an empty plan) every scheduling decision is
+    bit-identical to the unsupervised server across all five policies;
+  * the drift EWMA shrinks |committed - realized| across windows on a
+    real (reduced-config) model.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on bare tier-1 images
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (
+    POLICY_NAMES,
+    Application,
+    ModelProfile,
+    Request,
+    Schedule,
+    ScheduleEntry,
+    Worker,
+    WindowPipeline,
+    evaluate,
+    fast_multiworker_schedule,
+    make_policy,
+)
+from repro.core.health import DEGRADED, HEALTHY, QUARANTINED, HealthTracker
+from repro.core.scheduler import effective_apps, schedule_window
+from repro.core.streaming import StreamingState
+from repro.serving import (
+    EdgeServer,
+    ExecutorPool,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    WindowQueue,
+)
+
+
+def _mk(rid, arrival, deadline, app="a"):
+    return Request(rid=rid, app=app, arrival_s=arrival, deadline_s=deadline,
+                   true_label=0)
+
+
+def _sc_app(name="a", penalty="step"):
+    """Two variants named so the EXECUTOR short-circuits (zero wall time,
+    no JAX) while the SCHEDULER sees ordinary nonzero profiled latencies —
+    deterministic fault tests with a real execution plane."""
+    models = [
+        ModelProfile("fast:short_circuit", recalls=np.array([0.75, 0.75]),
+                     latency_s=0.02, load_latency_s=0.01),
+        ModelProfile("acc:short_circuit", recalls=np.array([0.95, 0.95]),
+                     latency_s=0.09, load_latency_s=0.04),
+    ]
+    return Application(name=name, models=models, penalty=penalty)
+
+
+def _sc_server(policy="LO-EDF", faults=None, health=False, preempt=False,
+               retry_budget=2, workers=None, **kw):
+    workers = workers or [Worker(0), Worker(1)]
+    return EdgeServer({"a": _sc_app()}, make_policy(policy),
+                      executor=ExecutorPool(workers, variants={}),
+                      prompt_fn=lambda r: None, workers=workers,
+                      faults=faults, health=health, preempt=preempt,
+                      retry_budget=retry_budget, **kw)
+
+
+# -- fault plan / injector ------------------------------------------------
+
+def test_fault_spec_and_plan_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meltdown")
+    with pytest.raises(ValueError):
+        FaultPlan(rates={"meltdown": 0.5})
+    with pytest.raises(ValueError):
+        FaultPlan(rates={"crash": 0.9, "transient": 0.3})  # sum > 1
+    plan = FaultPlan(rates={"crash": 0.1})  # dict normalized, hashable
+    assert plan.rates == (("crash", 0.1),)
+
+
+def test_poll_stochastic_determinism():
+    """Same plan => identical fault sequence, cell by cell; rates summing
+    to 1 fire on every poll."""
+    plan = FaultPlan(rates={"transient": 0.6, "crash": 0.4}, seed=11)
+    a, b = FaultInjector(plan), FaultInjector(plan)
+    grid = [(w, k, bi) for w in range(4) for k in range(2) for bi in range(5)]
+    got_a = [getattr(a.poll(w, k, bi), "kind", None) for w, k, bi in grid]
+    got_b = [getattr(b.poll(w, k, bi), "kind", None) for w, k, bi in grid]
+    assert got_a == got_b
+    assert None not in got_a  # probabilities sum to 1: always a fault
+    assert set(got_a) == {"transient", "crash"}
+
+
+def test_poll_deterministic_spec_counts():
+    """Pinned specs fire where addressed and honor ``count``."""
+    plan = FaultPlan(specs=(
+        FaultSpec(kind="crash", window=1, worker=0, batch=0),
+        FaultSpec(kind="transient", worker=1, count=2),
+    ))
+    inj = FaultInjector(plan)
+    assert inj.poll(0, 0, 0) is None  # wrong window
+    assert inj.poll(1, 0, 0).kind == "crash"
+    assert inj.poll(1, 0, 0) is None  # count=1 exhausted
+    assert inj.poll(1, 1, 0).kind == "transient"
+    assert inj.poll(2, 1, 3).kind == "transient"
+    assert inj.poll(3, 1, 0) is None  # count=2 exhausted
+    assert inj.fired() == 3 and inj.fired("transient") == 2
+    assert [f[3] for f in inj.log] == ["crash", "transient", "transient"]
+
+
+# -- withdraw rollback ----------------------------------------------------
+
+def _seed_state(now=0.1):
+    state = StreamingState(num_workers=2)
+    app = _sc_app()
+    reqs = [_mk(i, 0.0, 1.0) for i in range(3)]
+    tl = state.timeline(0)
+    tl.advance(now)
+    for i, (model, r) in enumerate(zip(
+            ["acc:short_circuit", "fast:short_circuit", "acc:short_circuit"], reqs)):
+        t_before, res_before = tl.t, list(tl._resident)
+        start, completion = tl.run_batch(app.model(model), 1)
+        state.record_batch(0, [r], model, i, start, completion - start,
+                           t_before, res_before)
+    return state, reqs
+
+
+def test_withdraw_tail_exact_rollback():
+    """Withdrawing a tail of the backlog restores the pre-batch snapshot
+    of the earliest withdrawn batch — busy-until time AND residency."""
+    state, reqs = _seed_state()
+    tl = state.timeline(0)
+    snap = state.backlog[0][1]
+    removed = state.withdraw({1, 2})
+    assert [r.rid for r in removed] == [1, 2]
+    assert tl.t == pytest.approx(snap.t_before)
+    assert tl._resident == snap.residency_before
+    assert [b.rids for b in state.backlog[0]] == [[0]]
+
+
+def test_withdraw_mid_queue_is_log_only():
+    """A failed batch with committed successors is removed from the log
+    WITHOUT rolling the timeline back (the lane burned the slot)."""
+    state, _ = _seed_state()
+    tl = state.timeline(0)
+    t_committed = tl.t
+    removed = state.withdraw({1})  # batch 2 (rid 2) stays committed
+    assert [r.rid for r in removed] == [1]
+    assert tl.t == pytest.approx(t_committed)  # no rollback
+    assert [b.rids for b in state.backlog[0]] == [[0], [2]]
+    assert state.withdraw({99}) == []  # unknown rid: no-op
+
+
+# -- lane supervision -----------------------------------------------------
+
+def test_pool_gathers_all_lane_outcomes():
+    """Satellite 1: one lane raising no longer skips the other lanes'
+    results or the wall_s accounting — everything is joined first."""
+    workers = [Worker(0), Worker(1)]
+    pool = ExecutorPool(workers, variants={})  # "real" models unknown
+    reqs = [_mk(i, 0.0, 5.0) for i in range(2)]
+    entries = [
+        ScheduleEntry(request=reqs[0], model="real", order=1, worker=0,
+                      batch_id=0, est_start_s=0.0, est_latency_s=0.1),
+        ScheduleEntry(request=reqs[1], model="sp:short_circuit", order=1,
+                      worker=1, batch_id=1, est_start_s=0.0, est_latency_s=0.1),
+    ]
+    dispatched = []
+    with pytest.raises(KeyError):
+        pool.execute_schedule(Schedule(entries=entries),
+                              prompt_fn=lambda r: np.zeros(4, np.int32),
+                              on_dispatch=dispatched.append)
+    assert [1] in dispatched  # lane 1 ran to completion regardless
+    assert pool.wall_s > 0.0  # accounting was not skipped
+
+
+def test_execute_supervised_captures_failures():
+    """The supervised twin records the bad batch instead of raising."""
+    workers = [Worker(0), Worker(1)]
+    pool = ExecutorPool(workers, variants={})
+    reqs = [_mk(i, 0.0, 5.0) for i in range(2)]
+    entries = [
+        ScheduleEntry(request=reqs[0], model="real", order=1, worker=0,
+                      batch_id=0, est_start_s=0.0, est_latency_s=0.1),
+        ScheduleEntry(request=reqs[1], model="sp:short_circuit", order=1,
+                      worker=1, batch_id=1, est_start_s=0.0, est_latency_s=0.1),
+    ]
+    out = pool.execute_supervised(Schedule(entries=entries),
+                                  prompt_fn=lambda r: np.zeros(4, np.int32))
+    assert [r.request_ids for r in out.reports] == [[1]]
+    assert out.reports[0].worker == 1
+    assert len(out.failures) == 1 and out.failures[0].kind == "error"
+    assert out.failed_rids() == {0} and out.timed_out == []
+
+
+def test_crash_cascades_down_the_lane():
+    """A crash fails its batch AND every later batch on that lane (marked
+    cascaded); the other lane is untouched."""
+    workers = [Worker(0), Worker(1)]
+    pool = ExecutorPool(workers, variants={})
+    reqs = [_mk(i, 0.0, 5.0) for i in range(4)]
+    entries = [
+        ScheduleEntry(request=reqs[0], model="sp:short_circuit", order=1,
+                      worker=0, batch_id=0, est_start_s=0.0, est_latency_s=0.1),
+        ScheduleEntry(request=reqs[1], model="sp:short_circuit", order=2,
+                      worker=0, batch_id=1, est_start_s=0.1, est_latency_s=0.1),
+        ScheduleEntry(request=reqs[2], model="sp:short_circuit", order=3,
+                      worker=0, batch_id=2, est_start_s=0.2, est_latency_s=0.1),
+        ScheduleEntry(request=reqs[3], model="sp:short_circuit", order=1,
+                      worker=1, batch_id=3, est_start_s=0.0, est_latency_s=0.1),
+    ]
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec(kind="crash", window=0, worker=0, batch=0),)))
+    out = pool.execute_supervised(Schedule(entries=entries),
+                                  prompt_fn=lambda r: None, injector=inj)
+    kinds = [(f.worker, f.kind, f.cascaded) for f in out.failures]
+    assert kinds == [(0, "crash", False), (0, "crash", True), (0, "crash", True)]
+    assert out.failed_rids() == {0, 1, 2}
+    assert [r.request_ids for r in out.reports] == [[3]]
+
+
+# -- closed-loop EdgeServer ----------------------------------------------
+
+def test_crash_mid_window_no_request_lost():
+    """Acceptance: a seeded crash loses no request and double-counts none —
+    every rid lands in the per-request records exactly once."""
+    plan = FaultPlan(specs=(FaultSpec(kind="crash", window=0, worker=0, batch=0),))
+    srv = _sc_server(faults=plan, health=True)
+    trace = [_mk(i, 0.01 * i, 3.0) for i in range(10)]
+    outs, stats = srv.run(trace)
+    assert stats.failed_batches >= 1 and stats.retries >= 1
+    assert sorted(srv._records) == list(range(10))  # exactly once per rid
+    assert stats.requests == 10
+    assert stats.dropped_after_retry == 0  # generous deadlines: all recovered
+    # The crash quarantined worker 0 immediately (kind-based fast path).
+    assert srv.health._health[0].quarantines >= 1
+
+
+def test_retry_exhaustion_drops_exactly_once():
+    """A fault that always fires exhausts the retry budget: each request
+    is dropped with a recorded violation and zero utility, once."""
+    plan = FaultPlan(specs=(FaultSpec(kind="transient", count=None),))
+    srv = _sc_server(faults=plan, retry_budget=2)
+    trace = [_mk(i, 0.01 * i, 50.0) for i in range(4)]
+    outs, stats = srv.run(trace)
+    assert stats.dropped_after_retry == 4
+    assert stats.requests == 4 and stats.violations == 4
+    assert all(srv._records[rid] == (0.0, True) for rid in range(4))
+    assert stats.mean_utility == pytest.approx(0.0, abs=1e-12)
+    # budget=2 => initial try + 2 retries per request.
+    assert srv._attempts == {rid: 3 for rid in range(4)}
+
+
+def test_straggler_quarantine_and_cooldown_reprobe():
+    """A hang-injected straggler lane is quarantined by the ratio EWMA,
+    receives no placements while masked, and is re-probed after cooldown."""
+    tracker = HealthTracker([0, 1], cooldown_windows=2)
+    # Worker 0 hangs on its first two windows' first batch: realized =
+    # delay >> committed (short-circuit realized time is ~0).
+    plan = FaultPlan(specs=(
+        FaultSpec(kind="hang", worker=0, window=0, batch=None, delay_s=1.0),
+        FaultSpec(kind="hang", worker=0, window=1, batch=None, delay_s=1.0),
+    ))
+    srv = _sc_server(faults=plan, health=tracker)
+    trace = [_mk(i, 0.02 * i, 8.0) for i in range(24)]
+    outs, stats = srv.run(trace)
+    assert tracker._health[0].quarantines >= 1  # the straggler was caught
+    assert tracker._health[1].quarantines == 0
+    # While quarantined, scheduling placed nothing on worker 0.
+    masked_windows = [
+        o for o in outs
+        if all(e.worker == 1 for e in o["schedule"].sorted_entries())
+    ]
+    assert masked_windows, "no window was scheduled under the mask"
+    # Cooldown released it (re-probe): it is no longer quarantined at end.
+    assert tracker.state_of(0) in (HEALTHY, DEGRADED)
+    assert stats.requests == len(trace)
+
+
+@pytest.mark.parametrize("policy_name", POLICY_NAMES)
+@pytest.mark.parametrize("preempt", [False, True])
+def test_injector_off_bit_identical(policy_name, preempt):
+    """An EMPTY fault plan (supervised execution, records accounting, no
+    faults) reproduces the plain server bit-for-bit across all five
+    policies, with and without preemption.  Health tracking is NOT in
+    this comparison: on short-circuit variants realized time is
+    genuinely ~0, so its drift correction is SUPPOSED to change
+    decisions — that is the feature, not a regression."""
+    trace = [_mk(i, 0.013 * i, 0.8 + 0.05 * (i % 3)) for i in range(14)]
+
+    def run(**kw):
+        srv = _sc_server(policy=policy_name, preempt=preempt, **kw)
+        outs, stats = srv.run([_mk(r.rid, r.arrival_s, r.deadline_s)
+                               for r in trace])
+        sig = [(e.request.rid, e.model, e.order, e.worker, e.batch_id)
+               for o in outs for e in o["schedule"].sorted_entries()]
+        return sig, stats
+
+    sig_plain, stats_plain = run()
+    sig_closed, stats_closed = run(faults=FaultPlan())
+    assert sig_closed == sig_plain
+    assert stats_closed.mean_utility == pytest.approx(stats_plain.mean_utility)
+    assert stats_closed.violations == stats_plain.violations
+    assert stats_closed.failed_batches == 0 and stats_closed.retries == 0
+
+
+def test_quarantine_mask_fastpath_and_pipeline_agree():
+    """A quarantined worker receives no placements on EITHER altitude, and
+    the numpy fast path and compiled pipeline stay decision-identical
+    under the same mask + drift scales."""
+    apps = {"a": _sc_app()}
+    workers = [Worker(0), Worker(1, speed=2.0)]
+    tracker = HealthTracker([0, 1])
+    tracker.record_failure(0, "crash")
+    assert tracker.state_of(0) == QUARANTINED
+    mask = tracker.active_wids(workers)
+    assert mask == {1}
+    scale = {(1, "fast:short_circuit"): 1.5}
+    reqs = [_mk(i, 0.0, 0.6) for i in range(6)]
+
+    def sig(sched):
+        return [(e.request.rid, e.model, e.order, e.worker, e.batch_id)
+                for e in sched.sorted_entries()]
+
+    fp = fast_multiworker_schedule(reqs, apps, workers, 0.1,
+                                   lat_scale=scale, worker_mask=mask)
+    wp = WindowPipeline(apps, policy=make_policy("SneakPeek"), workers=workers)
+    pl = wp.schedule([_mk(i, 0.0, 0.6) for i in range(6)], 0.1,
+                     lat_scale=scale, worker_mask=mask)
+    assert all(e.worker == 1 for e in fp.sorted_entries())
+    assert sig(fp) == sig(pl)
+    # All-quarantined never empties the pool: best-effort full mask.
+    tracker.record_failure(1, "crash")
+    assert tracker.active_wids(workers) is None
+    with pytest.raises(ValueError):
+        fast_multiworker_schedule(reqs, apps, workers, 0.1, worker_mask=set())
+
+
+def test_lat_scale_changes_placement_consistently():
+    """Drift scales actually steer placement (a heavily penalized worker
+    loses work) and both altitudes agree on the steered decisions."""
+    apps = {"a": _sc_app()}
+    workers = [Worker(0), Worker(1)]
+    reqs = [_mk(i, 0.0, 0.5) for i in range(8)]
+    scale = {(0, "fast:short_circuit"): 6.0, (0, "acc:short_circuit"): 6.0}
+
+    def sig(sched):
+        return [(e.request.rid, e.model, e.order, e.worker, e.batch_id)
+                for e in sched.sorted_entries()]
+
+    plain = fast_multiworker_schedule(reqs, apps, workers, 0.1)
+    scaled = fast_multiworker_schedule(reqs, apps, workers, 0.1, lat_scale=scale)
+    assert sig(plain) != sig(scaled)
+    n0_plain = sum(e.worker == 0 for e in plain.sorted_entries())
+    n0_scaled = sum(e.worker == 0 for e in scaled.sorted_entries())
+    assert n0_scaled < n0_plain  # the slow worker lost placements
+    wp = WindowPipeline(apps, policy=make_policy("Grouped"), workers=workers)
+    pl = wp.schedule([_mk(i, 0.0, 0.5) for i in range(8)], 0.1, lat_scale=scale)
+    grouped = fast_multiworker_schedule(reqs, apps, workers, 0.1,
+                                        lat_scale=scale, per_request=False)
+    assert sig(pl) == sig(grouped)
+
+
+def test_evaluate_latency_scale_stretches_commitments():
+    """``evaluate(latency_scale=...)`` stretches the committed replay:
+    completions move by exactly the scaled latency delta."""
+    apps = {"a": _sc_app()}
+    reqs = [_mk(0, 0.0, 1.0)]
+    sched = fast_multiworker_schedule(reqs, apps, [Worker(0)], 0.1)
+    base = evaluate(sched, apps, 0.1, num_workers=1)
+    sched2 = fast_multiworker_schedule([_mk(0, 0.0, 1.0)], apps, [Worker(0)], 0.1)
+    scaled = evaluate(sched2, apps, 0.1, num_workers=1,
+                      latency_scale=lambda w, m: 2.0)
+    model = sched.sorted_entries()[0].model
+    lat = apps["a"].model(model).latency_s
+    assert float(scaled.completions[0] - base.completions[0]) == pytest.approx(lat)
+
+
+def test_health_tracker_state_machine():
+    """healthy -> degraded -> quarantined -> (cooldown) -> degraded ->
+    healthy, plus the drift scale surfaces."""
+    t = HealthTracker([0], degrade_after=1, quarantine_after=3,
+                      cooldown_windows=2)
+    t.record_failure(0)
+    assert t.state_of(0) == DEGRADED
+    t.record_failure(0)
+    t.record_failure(0)  # third consecutive: quarantine
+    assert t.state_of(0) == QUARANTINED and t.quarantined() == [0]
+    assert t.close_window() == []  # cooldown 2 -> 1
+    assert t.close_window() == [0]  # released for re-probe
+    assert t.state_of(0) == DEGRADED
+    t.observe(0, "m", realized_s=0.1, committed_s=0.1)
+    assert t.state_of(0) == HEALTHY
+    t.observe(0, "m", realized_s=0.2, committed_s=0.1)
+    scales = t.latency_scale()
+    assert scales is not None and scales[(0, "m")] > 1.0
+    assert t.scale_fn()(0, "m") == scales[(0, "m")]
+    assert t.scale_fn()(0, "other") == 1.0
+    assert t.ratio_snapshot()[0] > 1.0
+    # Zero-committed observations carry no signal.
+    t2 = HealthTracker([0])
+    t2.observe(0, "m", realized_s=0.5, committed_s=0.0)
+    assert t2.latency_scale() is None and t2.ratio_snapshot()[0] == 1.0
+
+
+def test_closed_loop_requires_pool():
+    with pytest.raises(ValueError):
+        EdgeServer({"a": _sc_app()}, make_policy("LO-EDF"), faults=FaultPlan())
+
+
+def test_serve_stats_as_dict_has_fault_counters():
+    plan = FaultPlan(specs=(FaultSpec(kind="transient", window=0, worker=0,
+                                      batch=0),))
+    srv = _sc_server(faults=plan, health=True)
+    _, stats = srv.run([_mk(i, 0.01 * i, 2.0) for i in range(6)])
+    d = stats.as_dict()
+    for key in ("failed_batches", "retries", "dropped_after_retry",
+                "fallbacks", "quarantined_workers", "realized_over_profiled"):
+        assert key in d
+    assert d["failed_batches"] >= 1 and d["retries"] >= 1
+    assert set(d["realized_over_profiled"]) == {0, 1}
+
+
+def test_drift_correction_shrinks_timeline_error():
+    """Acceptance: with health on and a deliberately mis-profiled model,
+    |committed - realized| shrinks across windows as the EWMA converges."""
+    from repro.configs import ARCHS
+    from repro.serving import LMExecutor
+
+    cfg = ARCHS["mamba2-130m"].reduced()
+    # Profiled latency is ~an order of magnitude above realized: the
+    # drift scale (clamped at min_scale=0.25) must pull the committed
+    # estimates far closer to reality.
+    models = [ModelProfile("small", recalls=np.array([0.7, 0.7]),
+                           latency_s=0.5, load_latency_s=0.002)]
+    app = Application(name="lm", models=models, penalty="sigmoid")
+
+    def prompt_fn(r):
+        return np.random.default_rng(r.rid).integers(
+            0, cfg.vocab_size, 8).astype(np.int32)
+
+    workers = [Worker(0)]
+    pool = ExecutorPool(workers, variants={"small": (cfg, 0)}, new_tokens=1)
+    # Warm the lane (jit compile) so realized latency is steady-state.
+    pool.lanes[0].executor.run_batch(
+        "small", np.zeros((1, 8), np.int32), [999])
+    srv = EdgeServer({"lm": app}, make_policy("LO-EDF"), executor=pool,
+                     prompt_fn=prompt_fn, workers=workers, health=True,
+                     window_s=1.0)
+    reqs = [Request(rid=i, app="lm", arrival_s=1.0 * i + 0.5, deadline_s=60.0,
+                    true_label=0) for i in range(6)]
+    outs, stats = srv.run(reqs)
+    errs = []
+    for o in outs:
+        reps = o["reports"] or []
+        ents = {e.request.rid: e for e in o["schedule"].sorted_entries()}
+        win = [abs(ents[rep.request_ids[0]].est_latency_s - rep.total_s)
+               for rep in reps if rep.request_ids[0] in ents]
+        if win:
+            errs.append(float(np.mean(win)))
+    assert len(errs) >= 3
+    assert errs[-1] < 0.5 * errs[0], errs
+    assert stats.realized_over_profiled[0] < 1.0  # model was over-profiled
+
+
+# -- property: no double counting under random fault sequences -----------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1),
+       st.floats(min_value=0.0, max_value=0.45),
+       st.floats(min_value=0.0, max_value=0.45))
+def test_random_faults_never_double_count(seed, p_transient, p_crash):
+    """Whatever faults fire, every submitted rid appears in the server's
+    records exactly once and the aggregates match the records."""
+    plan = FaultPlan(rates={"transient": p_transient, "crash": p_crash},
+                     seed=seed)
+    srv = _sc_server(faults=plan, retry_budget=1)
+    trace = [_mk(i, 0.01 * i, 2.0) for i in range(8)]
+    _, stats = srv.run(trace)
+    assert sorted(srv._records) == list(range(8))
+    assert stats.requests == 8
+    assert stats.violations == sum(v for _, v in srv._records.values())
+    assert stats.mean_utility == pytest.approx(
+        sum(u for u, _ in srv._records.values()) / 8)
