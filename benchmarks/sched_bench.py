@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.sched_bench [--quick]
         [--sizes 64,256,1024,4096] [--policies SneakPeek,...]
-        [--workers 2,4] [--pipeline] [--out BENCH_sched.json]
+        [--workers 2,4] [--pipeline] [--executor] [--out BENCH_sched.json]
 
 For every (window size, policy) cell this times one full scheduling pass —
 the work the paper requires to finish inside the 100 ms window — under the
@@ -37,6 +37,12 @@ MW-SneakPeek compiled placement with the health tracker's drift
 ``lat_scale`` + all-healthy ``worker_mask`` plugged in, gated at < 5%
 added schedule latency (fault tolerance must be ~free when no faults
 fire).
+
+``--executor`` adds an informational (ungated) section: one identical
+request stream served through the full EdgeServer loop under each of the
+three executor backends (``serving/backends.py`` — profiled, compiled,
+costmodel) on reduced registry configs, reporting per-backend window
+execution wall time and the realized-vs-profiled latency ratio.
 
 Writes ``results/benchmarks/BENCH_sched.json`` (the single committed
 benchmark artifact) and prints a table.  Acceptance gates: the SneakPeek
@@ -326,6 +332,136 @@ def run_health_overhead(n=1024, nw=2, min_time_s=0.2):
     return row
 
 
+def run_executor(n_requests=16, new_tokens=2):
+    """Executor-backend section (informational, no gate): one identical
+    request stream served through the full EdgeServer loop under each
+    execution substrate — ``ProfiledBackend`` (legacy accounting path),
+    ``CompiledBackend`` (bucketed jitted forwards + continuous batching)
+    and ``CostModelBackend`` (roofline census, no device execution) — on
+    reduced-size registry configs.  Reports per-backend window wall time
+    (``ServeStats.wall_s`` over executed windows) and the
+    realized-vs-profiled latency ratio: summed ``ExecutionReport``
+    seconds over the schedule's committed ``est_latency_s`` for the same
+    batches (the drift PR 6's EWMA corrects, here end-to-end per
+    backend)."""
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        print("executor section skipped (JAX unavailable)", flush=True)
+        return []
+    from repro.configs import ARCHS
+    from repro.core import Application, Request
+    from repro.serving import (
+        CompiledBackend,
+        CostModelBackend,
+        EdgeServer,
+        ProfiledBackend,
+    )
+
+    def fresh_variants():
+        return {
+            "small": (ARCHS["mamba2-130m"].reduced(), 0),
+            "big": (ARCHS["tinyllama-1.1b"].reduced(), 1),
+        }
+
+    recalls = {"small": [0.75, 0.72], "big": [0.92, 0.90]}
+    prompt_len = 12
+    rng = np.random.default_rng(7)
+    deadlines = [float(rng.choice([0.3, 0.6, 1.0])) for _ in range(n_requests)]
+    labels = [int(rng.integers(2)) for _ in range(n_requests)]
+    vocab = fresh_variants()["small"][0].vocab_size
+
+    def prompt_fn(req):
+        return (
+            np.random.default_rng(req.rid).integers(0, vocab, prompt_len)
+            .astype(np.int32)
+        )
+
+    def warm_profiled(backend):
+        # The legacy path records every stopwatch run, including the one
+        # that compiles; seed the fit the way CompiledBackend calibrates
+        # itself — compile first, keep only warm observations.
+        for name in backend.variants:
+            for _ in range(2):
+                for b in (1, 2):
+                    backend.run_batch(
+                        name, np.zeros((b, prompt_len), np.int32), list(range(b))
+                    )
+            backend._obs[name] = backend._obs[name][2:]
+
+    rows = []
+    for bname in ("profiled", "compiled", "costmodel"):
+        if bname == "profiled":
+            backend = ProfiledBackend(fresh_variants(), new_tokens=new_tokens)
+            warm_profiled(backend)
+        elif bname == "compiled":
+            backend = CompiledBackend(fresh_variants(), new_tokens=new_tokens)
+            for name in backend.variants:
+                backend.affine(name)  # self-calibrates (compiles) untimed
+        else:
+            backend = CostModelBackend(
+                fresh_variants(), prompt_tokens=prompt_len, new_tokens=new_tokens
+            )
+        profiles = [backend.profile(m, recalls[m]) for m in ("small", "big")]
+        app = Application(name="assistant", models=profiles, penalty="sigmoid")
+
+        def serve():
+            server = EdgeServer(
+                {"assistant": app}, make_policy("SneakPeek"),
+                backend=backend, prompt_fn=prompt_fn,
+            )
+            reqs = [
+                Request(rid=i, app="assistant", arrival_s=0.01 * (i + 1),
+                        deadline_s=0.01 * i + deadlines[i], true_label=labels[i],
+                        theta=np.full(2, 0.5))
+                for i in range(n_requests)
+            ]
+            return server.run(reqs)
+
+        # The profiles are static, so the schedule (and thus every jitted
+        # shape the backend sees) is identical across passes: the first
+        # pass compiles, the measured pass runs warm — window wall time
+        # and the drift ratio reflect steady-state serving, not one-off
+        # XLA compilation.
+        serve()
+        outs, stats = serve()
+        realized = profiled = 0.0
+        served = 0
+        for o in outs:
+            ents = {e.request.rid: e for e in o["schedule"].sorted_entries()}
+            for rep in o["reports"] or []:
+                if not rep.request_ids:
+                    continue
+                served += rep.batch_size
+                e = ents.get(rep.request_ids[0])
+                if e is not None and e.est_latency_s > 0:
+                    realized += rep.total_s
+                    profiled += e.est_latency_s
+        row = {
+            "backend": bname,
+            "provenance": backend.provenance,
+            "requests": n_requests,
+            "served": served,
+            "windows": stats.windows,
+            "swaps": stats.swaps,
+            "window_wall_s": stats.wall_s / max(stats.windows, 1),
+            "realized_s": realized,
+            "profiled_s": profiled,
+            "realized_over_profiled": realized / profiled if profiled else None,
+            "mean_utility": stats.mean_utility,
+        }
+        rows.append(row)
+        ratio = row["realized_over_profiled"]
+        ratio_str = f"{ratio:5.2f}x" if ratio is not None else "  n/a"
+        print(
+            f"[executor] {bname:9s} ({backend.provenance:9s})"
+            f" window wall {row['window_wall_s'] * 1e3:8.2f} ms"
+            f" | realized/profiled {ratio_str}",
+            flush=True,
+        )
+    return rows
+
+
 def run_multiworker(sizes, worker_counts, min_time_s=0.2):
     """Eq. 15 placement throughput: scalar loop vs batched utility tiles."""
     rows = []
@@ -415,6 +551,9 @@ def main():
                     help="multi-worker pool sizes (default 2,4; 0 disables)")
     ap.add_argument("--pipeline", action="store_true",
                     help="benchmark the fused jitted window pipeline section")
+    ap.add_argument("--executor", action="store_true",
+                    help="serve one stream through each executor backend "
+                         "(window wall time + realized/profiled latency ratio)")
     ap.add_argument("--pipeline-policies", type=str, default="LO-EDF,LO-Priority,SneakPeek")
     ap.add_argument(
         "--out", type=str,
@@ -460,6 +599,7 @@ def main():
         if args.pipeline and worker_counts
         else None
     )
+    exec_rows = run_executor() if args.executor else []
 
     gate = [
         r for r in rows
@@ -497,6 +637,7 @@ def main():
         "multiworker_results": mw_rows,
         "pipeline_results": pipe_rows,
         "pipeline_multiworker_results": mw_pipe_rows,
+        "executor_results": exec_rows,
         "sneakpeek_1024_speedup": gate[0]["speedup"] if gate else None,
         "multiworker_1024_speedup": mw_gate[0]["speedup"] if mw_gate else None,
         "pipeline_1024_speedup": (

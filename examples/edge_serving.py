@@ -123,6 +123,11 @@ def main():
     ratios = " ".join(f"w{w}={r:.2f}"
                       for w, r in sorted(fstats.realized_over_profiled.items()))
     print(f"  realized/profiled EWMA: {ratios}")
+    # Which estimate is the EWMA correcting?  The profile provenance
+    # (profiled / costmodel / realized) names the baseline per model.
+    prov = " ".join(f"{m}={p}"
+                    for m, p in sorted(fstats.profile_provenance.items()))
+    print(f"  profile provenance: {prov}")
 
 
 if __name__ == "__main__":

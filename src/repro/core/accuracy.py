@@ -51,6 +51,12 @@ class ModelProfile:
       is_short_circuit: True when this profile wraps a SneakPeek model used
         for short-circuit inference (§V-C1): zero marginal latency, and the
         scheduler must use its *profiled* accuracy (never data-sharpened).
+      provenance: where the latency/memory numbers come from —
+        ``"profiled"`` (stopwatch/asserted constants, the default),
+        ``"costmodel"`` (roofline-derived, ``serving.profiles``), or
+        ``"realized"`` (fit from executed batches,
+        ``serving.backends.CompiledBackend``).  The drift correction
+        (``realized_over_profiled``) reports which estimate it corrects.
     """
 
     name: str
@@ -60,6 +66,7 @@ class ModelProfile:
     memory_bytes: int = 0
     latency_model: tuple[float, float] | None = None
     is_short_circuit: bool = False
+    provenance: str = "profiled"
 
     def __post_init__(self):
         object.__setattr__(self, "recalls", np.asarray(self.recalls, dtype=np.float64))
@@ -69,6 +76,9 @@ class ModelProfile:
             raise ValueError("recalls must lie in [0, 1]")
         if self.latency_s < 0 or self.load_latency_s < 0:
             raise ValueError("latencies must be non-negative")
+        if self.provenance not in ("profiled", "costmodel", "realized"):
+            raise ValueError(
+                f"provenance must be profiled|costmodel|realized, got {self.provenance!r}")
 
     @property
     def num_classes(self) -> int:

@@ -1,5 +1,18 @@
+from repro.serving.backends import (
+    CompiledBackend,
+    CostModelBackend,
+    ExecutorBackend,
+    ProfiledBackend,
+)
 from repro.serving.faults import FaultInjector, FaultPlan, FaultSpec
-from repro.serving.profiles import lm_latency_model, lm_profile, load_dryrun_record
+from repro.serving.profiles import (
+    costmodel_latency_model,
+    costmodel_profile,
+    costmodel_terms,
+    lm_latency_model,
+    lm_profile,
+    load_dryrun_record,
+)
 from repro.serving.runtime import (
     BatchFailure,
     ExecutionReport,
@@ -14,6 +27,8 @@ from repro.serving.server import EdgeServer, ServeStats
 
 __all__ = [
     "lm_latency_model", "lm_profile", "load_dryrun_record",
+    "costmodel_latency_model", "costmodel_profile", "costmodel_terms",
+    "ExecutorBackend", "ProfiledBackend", "CompiledBackend", "CostModelBackend",
     "ExecutionReport", "LMExecutor", "SwapManager", "WindowQueue",
     "WorkerExecutor", "ExecutorPool",
     "BatchFailure", "PoolOutcome",

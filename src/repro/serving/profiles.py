@@ -22,7 +22,14 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.accuracy import ModelProfile
 
-__all__ = ["lm_latency_model", "lm_profile", "load_dryrun_record"]
+__all__ = [
+    "lm_latency_model",
+    "lm_profile",
+    "load_dryrun_record",
+    "costmodel_terms",
+    "costmodel_latency_model",
+    "costmodel_profile",
+]
 
 _DCN_BW = 25e9  # host->HBM staging bandwidth for cold weight loads (B/s)
 
@@ -37,7 +44,8 @@ def load_dryrun_record(results_dir, arch: str, shape: str, mesh: str = "pod") ->
 
 
 def lm_latency_model(
-    results_dir, arch: str, prompt_tokens: int = 512, new_tokens: int = 64, mesh: str = "pod"
+    results_dir, arch: str, prompt_tokens: int = 512, new_tokens: int = 64,
+    mesh: str = "pod", n_devices: int = 16
 ) -> tuple[float, float]:
     """(fixed_s, per_item_s) affine batch-latency model for one variant.
 
@@ -60,11 +68,125 @@ def lm_latency_model(
         fixed = new_tokens * t_dec_batch * 0.7 + t_prefill
         per_item = new_tokens * t_dec_batch * 0.3 / b_cell + t_prefill * 0.1
         return float(fixed), float(per_item)
-    # analytic fallback: weights streaming at HBM bw per token
-    hbm = 819e9
-    t_tok = 2.0 * cfg.active_param_count() / 16 / hbm
-    t_prefill = 2.0 * cfg.active_param_count() * prompt_tokens / 197e12
+    # analytic fallback: weights stream at HBM bandwidth per token; the
+    # prompt's prefill flops run at peak.  Both divide by the device
+    # count — the same sharding the decode term assumes.
+    from repro.launch.hlo_analysis import HW
+
+    hbm, peak = HW["hbm_bw"], HW["peak_flops_bf16"]
+    t_tok = 2.0 * cfg.active_param_count() / n_devices / hbm
+    t_prefill = 2.0 * cfg.active_param_count() * prompt_tokens / n_devices / peak
     return float(new_tokens * t_tok + t_prefill), float(t_prefill * 0.05)
+
+
+def costmodel_terms(
+    arch, prompt_tokens: int = 512, new_tokens: int = 64, n_devices: int = 16
+) -> dict:
+    """Analytic roofline census for one serving step, term by term.
+
+    The same decomposition ``launch/costmodel.py`` compiles piece by
+    piece (stub + scanned periods + tail), collapsed to closed form with
+    the ``launch/hlo_analysis.HW`` constants:
+
+    * ``prefill_fixed_s``  — weights read once from HBM (shared by the
+      whole batch).
+    * ``prefill_item_s``   — each prompt's ``2 * active_params * tokens``
+      flops at peak.
+    * ``decode_fixed_s``   — per generated token, the weight stream from
+      HBM (batch-independent: one pass serves every sequence).
+    * ``decode_item_s``    — per sequence: decode flops at peak plus the
+      KV-cache read (``models/kvcache.cache_bytes`` at the full
+      prompt+generation length) per step.
+
+    The affine model is then ``fixed = prefill_fixed + decode_fixed`` and
+    ``per_item = prefill_item + decode_item``.
+    """
+    from repro.models.kvcache import cache_bytes
+
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    from repro.launch.hlo_analysis import HW
+
+    hbm, peak = HW["hbm_bw"], HW["peak_flops_bf16"]
+    act = cfg.active_param_count()
+    dtype_bytes = 2 if cfg.dtype == "bfloat16" else 4
+    t_weight = dtype_bytes * act / n_devices / hbm
+    t_cache = cache_bytes(cfg, 1, prompt_tokens + new_tokens) / n_devices / hbm
+    return {
+        "prefill_fixed_s": t_weight,
+        "prefill_item_s": 2.0 * act * prompt_tokens / n_devices / peak,
+        "decode_fixed_s": new_tokens * t_weight,
+        "decode_item_s": new_tokens * (2.0 * act / n_devices / peak + t_cache),
+    }
+
+
+def costmodel_latency_model(
+    arch, prompt_tokens: int = 512, new_tokens: int = 64, results_dir=None,
+    mesh: str = "pod", n_devices: int = 16, costs=None
+) -> tuple[float, float]:
+    """(fixed_s, per_item_s) from the best cost source available.
+
+    Priority: dry-run roofline artifacts (when ``results_dir`` holds
+    them) > ``launch/costmodel.composed_cost`` totals passed via
+    ``costs=`` (keys ``flops``/``bytes``/``collective_bytes``, optional
+    ``batch``) > the analytic ``costmodel_terms`` census.  All three are
+    device-count-consistent, so they agree within a small factor.
+    """
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    if results_dir is not None:
+        dec = load_dryrun_record(results_dir, cfg.name, "decode_32k", mesh)
+        pre = load_dryrun_record(results_dir, cfg.name, "prefill_32k", mesh)
+        if dec and pre:
+            return lm_latency_model(
+                results_dir, cfg.name, prompt_tokens, new_tokens, mesh, n_devices)
+    terms = costmodel_terms(cfg, prompt_tokens, new_tokens, n_devices)
+    if costs is not None:
+        # composed_cost totals for one decode step at ``batch`` sequences:
+        # roofline the step, then split it 70/30 fixed/per-item like the
+        # dry-run path (weight streaming dominates the fixed share).
+        from repro.launch.hlo_analysis import roofline_terms
+
+        b = int(costs.get("batch", 1))
+        rt = roofline_terms(
+            costs["flops"] / n_devices,
+            costs["bytes"] / n_devices,
+            costs.get("collective_bytes", 0) / n_devices,
+        )
+        t_step = max(rt["t_compute_s"], rt["t_memory_s"], rt["t_collective_s"])
+        fixed = new_tokens * t_step * 0.7 + terms["prefill_fixed_s"]
+        per_item = new_tokens * t_step * 0.3 / b + terms["prefill_item_s"]
+        return float(fixed), float(per_item)
+    fixed = terms["prefill_fixed_s"] + terms["decode_fixed_s"]
+    per_item = terms["prefill_item_s"] + terms["decode_item_s"]
+    return float(fixed), float(per_item)
+
+
+def costmodel_profile(
+    arch,
+    recalls,
+    prompt_tokens: int = 512,
+    new_tokens: int = 64,
+    results_dir=None,
+    name: str | None = None,
+    mesh: str = "pod",
+    n_devices: int = 16,
+    costs=None,
+) -> ModelProfile:
+    """``ModelProfile`` minted from the cost model (provenance
+    ``"costmodel"``): no device execution — usable for variants far too
+    large for this host."""
+    cfg = get_config(arch) if isinstance(arch, str) else arch
+    fixed, per_item = costmodel_latency_model(
+        cfg, prompt_tokens, new_tokens, results_dir, mesh, n_devices, costs)
+    weight_bytes = (2 if cfg.dtype == "bfloat16" else 4) * cfg.param_count()
+    return ModelProfile(
+        name=name or cfg.name,
+        recalls=np.asarray(recalls, dtype=np.float64),
+        latency_s=fixed + per_item,
+        load_latency_s=weight_bytes / _DCN_BW / n_devices,
+        memory_bytes=weight_bytes,
+        latency_model=(fixed, per_item),
+        provenance="costmodel",
+    )
 
 
 def lm_profile(
@@ -87,4 +209,5 @@ def lm_profile(
         load_latency_s=weight_bytes / _DCN_BW / 16,  # per-device shard staged in parallel
         memory_bytes=weight_bytes,
         latency_model=(fixed, per_item),
+        provenance="costmodel",  # roofline-derived, not measured on-device
     )

@@ -2,10 +2,12 @@
 
 This is the *real* execution half of the system (the paper's "worker"):
 the scheduler (repro.core) decides (model, order, batch); the runtime
-loads weights, runs prefill+decode on actual JAX models, and accounts
-latency + swap costs.  On this CPU container it runs reduced configs;
-the same code path drives full configs on a pod (the jitted step fns are
-the ones the dry-run compiles).
+charges swaps and dispatches batches to an ``ExecutorBackend``
+(``serving.backends``) — jitted JAX models by default, bucketed
+continuous-batching forwards or pure cost-model estimates when a
+different backend is passed.  On this CPU container the default backend
+runs reduced configs; the same code path drives full configs on a pod
+(the jitted step fns are the ones the dry-run compiles).
 """
 from __future__ import annotations
 
@@ -16,14 +18,12 @@ from concurrent.futures import ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Callable, Mapping, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.multiworker import Worker
 from repro.core.residency import evict_lru
 from repro.core.types import Request, Schedule, ScheduleEntry
-from repro.models import LM
+from repro.serving.backends import ExecutionReport, ExecutorBackend, ProfiledBackend
 
 __all__ = [
     "WindowQueue",
@@ -115,26 +115,6 @@ class SwapManager:
 
 
 @dataclasses.dataclass
-class ExecutionReport:
-    """Realized execution of one scheduled batch (timing + outputs)."""
-
-    request_ids: list
-    model: str
-    batch_size: int
-    swap_s: float
-    prefill_s: float
-    decode_s: float
-    tokens: np.ndarray  # (B, new_tokens) generated ids
-    predictions: list  # per-request predicted class (argmax over option logits)
-    worker: int = -1  # lane that executed the batch (-1: single-executor path)
-
-    @property
-    def total_s(self) -> float:
-        """Swap + prefill + decode seconds for the batch."""
-        return self.swap_s + self.prefill_s + self.decode_s
-
-
-@dataclasses.dataclass
 class BatchFailure:
     """One batch that did NOT execute successfully on its lane.
 
@@ -169,77 +149,52 @@ class PoolOutcome:
 
 
 class LMExecutor:
-    """Executes scheduled batches on real (reduced-config) JAX models.
+    """Executes scheduled batches through an ``ExecutorBackend``.
 
-    Variants: {name: (ModelConfig, seed)} — params are materialized
-    lazily on first use and cached (host RAM is the "disk"; the
-    SwapManager decides what is "in HBM").
+    The executor owns the residency accounting (its ``SwapManager``,
+    sized by ``backend.model_bytes`` and charged at ``backend.swap_cost``
+    per cold load); the backend owns the actual forward passes.  With no
+    explicit ``backend`` the default is ``ProfiledBackend`` over
+    ``variants`` ({name: (ModelConfig, seed)}) — byte-for-byte the
+    pre-backend behavior: weight-only sizes, 25 GB/s staging, jitted
+    prefill+decode per scheduled batch.
 
     Classification convention for the paper's applications: each request
     carries ``features`` already tokenized (prompt ids); the predicted
     class = argmax over the logits of ``class_token_ids`` after prefill.
     """
 
-    def __init__(self, variants: Mapping[str, tuple], capacity_bytes: int | None = None,
-                 new_tokens: int = 4):
-        self.variants = dict(variants)
-        self.new_tokens = new_tokens
-        self._models: dict[str, LM] = {}
-        self._params: dict[str, dict] = {}
-        sizes, loads = {}, {}
-        for name, (cfg, seed) in self.variants.items():
-            bytes_ = 2 * cfg.param_count() if cfg.dtype == "bfloat16" else 4 * cfg.param_count()
-            sizes[name] = bytes_
-            loads[name] = bytes_ / 25e9  # host->device staging
+    def __init__(self, variants: Mapping[str, tuple] | None = None,
+                 capacity_bytes: int | None = None, new_tokens: int = 4,
+                 backend: ExecutorBackend | None = None):
+        if backend is None:
+            if variants is None:
+                raise ValueError("LMExecutor needs variants=... or backend=...")
+            backend = ProfiledBackend(variants, new_tokens=new_tokens)
+        self.backend = backend
+        self.variants = dict(backend.variants)
+        self.new_tokens = backend.new_tokens
+        sizes = {name: int(backend.model_bytes(name)) for name in self.variants}
+        loads = {name: float(backend.swap_cost(name)) for name in self.variants}
         self.swaps = SwapManager(capacity_bytes, sizes, loads)
-        self._prefill_jit: dict[str, Callable] = {}
-        self._decode_jit: dict[str, Callable] = {}
-
-    def _get(self, name: str):
-        if name not in self._models:
-            cfg, seed = self.variants[name]
-            model = LM(cfg)
-            self._models[name] = model
-            self._params[name] = model.init(seed)
-            self._prefill_jit[name] = jax.jit(
-                lambda p, t, m=model: m.prefill(p, t, max_len=t.shape[1] + self.new_tokens)
-            )
-            self._decode_jit[name] = jax.jit(lambda p, c, t, m=model: m.decode_step(p, c, t))
-        return self._models[name], self._params[name]
 
     def run_batch(self, model_name: str, prompts: np.ndarray, request_ids: list,
                   class_token_ids: Optional[np.ndarray] = None) -> ExecutionReport:
         """prompts: (B, S) int32 (pre-padded)."""
-        model, params = self._get(model_name)
         swap_s = self.swaps.load(model_name)
+        report = self.backend.run_batch(model_name, prompts, request_ids, class_token_ids)
+        report.swap_s = swap_s
+        return report
 
-        t0 = time.perf_counter()
-        logits, cache = self._prefill_jit[model_name](params, jnp.asarray(prompts))
-        logits.block_until_ready()
-        t1 = time.perf_counter()
-        toks = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        preds = None
-        if class_token_ids is not None:
-            option_logits = np.asarray(logits)[:, np.asarray(class_token_ids)]
-            preds = list(np.argmax(option_logits, axis=-1))
-        toks.append(tok)
-        for _ in range(self.new_tokens - 1):
-            logits, cache = self._decode_jit[model_name](params, cache, tok[:, None])
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            toks.append(tok)
-        tok.block_until_ready()
-        t2 = time.perf_counter()
-        return ExecutionReport(
-            request_ids=request_ids,
-            model=model_name,
-            batch_size=prompts.shape[0],
-            swap_s=swap_s,
-            prefill_s=t1 - t0,
-            decode_s=t2 - t1,
-            tokens=np.stack([np.asarray(t) for t in toks], axis=1),
-            predictions=preds if preds is not None else [None] * prompts.shape[0],
-        )
+    @staticmethod
+    def _pad(batch: Sequence[ScheduleEntry],
+             prompt_fn: Callable[[Request], np.ndarray]) -> np.ndarray:
+        prompts = [prompt_fn(e.request) for e in batch]
+        maxlen = max(p.shape[0] for p in prompts)
+        padded = np.zeros((len(prompts), maxlen), np.int32)
+        for k, p in enumerate(prompts):
+            padded[k, :p.shape[0]] = p
+        return padded
 
     def run_entry_batch(self, batch: Sequence[ScheduleEntry],
                         prompt_fn: Callable[[Request], np.ndarray],
@@ -253,22 +208,47 @@ class LMExecutor:
                 batch_size=len(batch), swap_s=0.0, prefill_s=0.0, decode_s=0.0,
                 tokens=np.zeros((len(batch), 0), np.int32),
                 predictions=[None] * len(batch))
-        prompts = [prompt_fn(e.request) for e in batch]
-        maxlen = max(p.shape[0] for p in prompts)
-        padded = np.zeros((len(prompts), maxlen), np.int32)
-        for k, p in enumerate(prompts):
-            padded[k, :p.shape[0]] = p
         return self.run_batch(
-            batch[0].model, padded, [e.request.rid for e in batch], class_token_ids)
+            batch[0].model, self._pad(batch, prompt_fn),
+            [e.request.rid for e in batch], class_token_ids)
 
     def execute_schedule(self, schedule: Schedule, prompt_fn: Callable[[Request], np.ndarray],
                          class_token_ids=None) -> list[ExecutionReport]:
         """Run a scheduler-produced Schedule batch by batch (grouped entries
-        with the same batch_id execute as one padded batch)."""
-        return [
-            self.run_entry_batch(batch, prompt_fn, class_token_ids)
-            for batch in iter_entry_batches(schedule.sorted_entries())
-        ]
+        with the same batch_id execute as one padded batch).
+
+        When the backend supports continuous batching (``run_batches``,
+        e.g. ``CompiledBackend``), consecutive same-model batches in the
+        window fuse into one forward pass; the swap is charged once on
+        the run's first report (later batches would have found the model
+        resident anyway, a 0-cost load), and per-batch reports come back
+        with the fused time split between them.
+        """
+        batches = list(iter_entry_batches(schedule.sorted_entries()))
+        merged_runs = hasattr(self.backend, "run_batches")
+        reports: list[ExecutionReport] = []
+        i = 0
+        while i < len(batches):
+            model = batches[i][0].model
+            j = i
+            if merged_runs and not model.endswith(":short_circuit"):
+                while j + 1 < len(batches) and batches[j + 1][0].model == model:
+                    j += 1
+            if j == i:
+                reports.append(self.run_entry_batch(batches[i], prompt_fn, class_token_ids))
+            else:
+                run = batches[i:j + 1]
+                swap_s = self.swaps.load(model)
+                merged = self.backend.run_batches(
+                    model,
+                    [self._pad(b, prompt_fn) for b in run],
+                    [[e.request.rid for e in b] for b in run],
+                    class_token_ids,
+                )
+                merged[0].swap_s = swap_s
+                reports.extend(merged)
+            i = j + 1
+        return reports
 
 
 class WorkerExecutor:
@@ -284,10 +264,11 @@ class WorkerExecutor:
     scaled profiles Eq. 15 placed the batch with.
     """
 
-    def __init__(self, worker: Worker, variants: Mapping[str, tuple],
-                 capacity_bytes: int | None = None, new_tokens: int = 4):
+    def __init__(self, worker: Worker, variants: Mapping[str, tuple] | None = None,
+                 capacity_bytes: int | None = None, new_tokens: int = 4,
+                 backend: ExecutorBackend | None = None):
         self.worker = worker
-        self.executor = LMExecutor(variants, capacity_bytes, new_tokens)
+        self.executor = LMExecutor(variants, capacity_bytes, new_tokens, backend=backend)
         self.busy_s = 0.0
 
     @property
@@ -394,12 +375,23 @@ class ExecutorPool:
     per-lane swap counts and busy seconds into ``ServeStats``.
     """
 
-    def __init__(self, workers: Sequence[Worker], variants: Mapping[str, tuple],
-                 capacity_bytes: int | None = None, new_tokens: int = 4):
+    def __init__(self, workers: Sequence[Worker], variants: Mapping[str, tuple] | None = None,
+                 capacity_bytes: int | None = None, new_tokens: int = 4,
+                 backend_factory: Callable[[], ExecutorBackend] | None = None):
+        """``backend_factory`` (e.g. ``some_backend.spawn``) is called once
+        per lane so every worker gets its own substrate instance — its own
+        params, jit caches and residency, as a real per-worker device
+        would.  Without it each lane builds the default
+        ``ProfiledBackend`` over ``variants``."""
         if not workers:
             raise ValueError("ExecutorPool requires at least one worker")
+        if variants is None and backend_factory is None:
+            raise ValueError("ExecutorPool needs variants=... or backend_factory=...")
         self.lanes: dict[int, WorkerExecutor] = {
-            w.wid: WorkerExecutor(w, variants, capacity_bytes, new_tokens)
+            w.wid: WorkerExecutor(
+                w, variants, capacity_bytes, new_tokens,
+                backend=backend_factory() if backend_factory is not None else None,
+            )
             for w in workers
         }
         self.wall_s = 0.0  # wall-clock spent inside execute_schedule calls
@@ -411,13 +403,15 @@ class ExecutorPool:
     def from_executor(cls, executor: LMExecutor,
                       workers: Sequence[Worker]) -> "ExecutorPool":
         """Build a pool with one lane per worker from a single-executor
-        config (same variants / capacity / new_tokens); each lane still
-        owns its residency, as a real per-worker memory would."""
+        config (same backend config / capacity / new_tokens, one
+        ``backend.spawn()`` per lane); each lane still owns its
+        residency, as a real per-worker memory would."""
         return cls(
             workers,
             executor.variants,
             capacity_bytes=executor.swaps.capacity,
             new_tokens=executor.new_tokens,
+            backend_factory=executor.backend.spawn,
         )
 
     @property
@@ -460,27 +454,16 @@ class ExecutorPool:
         lane's exception no longer leaves the other lanes' futures
         undrained or skips the ``wall_s`` accounting — the first failing
         lane's error (ascending worker id) is re-raised only after every
-        lane has been joined."""
-        by_worker = self._split(schedule)
-        t0 = time.perf_counter()
-        futures = {
-            wid: self._tp.submit(
-                self.lanes[wid].execute, entries, prompt_fn,
-                class_token_ids, until, on_dispatch,
-            )
-            for wid, entries in by_worker.items()
-        }
-        results: dict[int, list[ExecutionReport]] = {}
-        errors: dict[int, BaseException] = {}
-        for wid in sorted(futures):
-            try:
-                results[wid] = futures[wid].result()
-            except BaseException as err:  # gather-all: re-raised below
-                errors[wid] = err
-        self.wall_s += time.perf_counter() - t0
-        if errors:
-            raise errors[min(errors)]
-        return [r for wid in sorted(results) for r in results[wid]]
+        lane has been joined.
+
+        This IS the supervised gather with its machinery off: no
+        injector, no failure sinks, no timeout — ``_gather`` degenerates
+        to the plain dispatch loop and lane exceptions propagate instead
+        of becoming ``BatchFailure`` records."""
+        return self._gather(
+            schedule, prompt_fn, class_token_ids, until, on_dispatch,
+            injector=None, window=0, timeout_s=None, supervised=False,
+        ).reports
 
     def _split(self, schedule: Schedule) -> dict[int, list[ScheduleEntry]]:
         """Entries per worker id (schedule order), lanes validated and
@@ -524,6 +507,35 @@ class ExecutorPool:
         Returns a ``PoolOutcome``; the serving loop withdraws
         ``failed_rids()`` via ``StreamingState.withdraw`` and re-admits
         them under its retry budget."""
+        return self._gather(
+            schedule, prompt_fn, class_token_ids, until, on_dispatch,
+            injector, window, timeout_s, supervised=True,
+        )
+
+    def _gather(
+        self,
+        schedule: Schedule,
+        prompt_fn: Callable[[Request], np.ndarray],
+        class_token_ids,
+        until: float | None,
+        on_dispatch: Callable[[list[int]], None] | None,
+        injector,
+        window: int,
+        timeout_s: float | None,
+        supervised: bool,
+    ) -> PoolOutcome:
+        """The one dispatch loop both public paths share: split entries
+        per worker, submit every lane, join in ascending worker id,
+        account ``wall_s`` exactly once.
+
+        ``supervised=False`` is the degenerate case — lanes run with no
+        failure sink (exceptions propagate), no timeout deadline exists,
+        and the first failing lane's error is re-raised after every lane
+        has been joined.  ``supervised=True`` hands each lane a
+        ``BatchFailure`` sink, converts lane-level exceptions into
+        ``kind="lane"`` failures for the lane's unaccounted batches, and
+        records (then hard-joins) lanes that blow the shared
+        ``timeout_s`` deadline."""
         by_worker = self._split(schedule)
         failures_by: dict[int, list[BatchFailure]] = {wid: [] for wid in by_worker}
         t0 = time.perf_counter()
@@ -531,13 +543,14 @@ class ExecutorPool:
             wid: self._tp.submit(
                 self.lanes[wid].execute, entries, prompt_fn,
                 class_token_ids, until, on_dispatch,
-                injector, window, failures_by[wid],
+                injector, window, failures_by[wid] if supervised else None,
             )
             for wid, entries in by_worker.items()
         }
         reports: list[ExecutionReport] = []
         failures: list[BatchFailure] = []
         timed_out: list[int] = []
+        errors: dict[int, BaseException] = {}
         deadline = None if timeout_s is None else t0 + timeout_s
         for wid in sorted(futures):
             lane_reports: list[ExecutionReport] = []
@@ -551,23 +564,31 @@ class ExecutorPool:
                     except FuturesTimeout:
                         timed_out.append(wid)
                         lane_reports = futures[wid].result()  # hard join
-            except Exception as err:
-                # Lane-level failure outside the per-batch guard: every
-                # batch not already reported or failed goes down with it.
-                done = {rid for f in failures_by[wid] for rid in f.request_ids}
-                for rep in lane_reports:
-                    done.update(rep.request_ids)
-                for bi, batch in enumerate(iter_entry_batches(
-                        sorted(by_worker[wid], key=lambda e: e.order))):
-                    rids = [e.request.rid for e in batch]
-                    if not done.intersection(rids):
-                        failures_by[wid].append(BatchFailure(
-                            worker=wid, request_ids=rids, model=batch[0].model,
-                            kind="lane", batch_index=bi, error=repr(err)))
-                lane_reports = []
+            except BaseException as err:
+                if not supervised:
+                    # Gather-all: re-raised below, after every lane joins.
+                    errors[wid] = err
+                elif isinstance(err, Exception):
+                    # Lane-level failure outside the per-batch guard: every
+                    # batch not already reported or failed goes down with it.
+                    done = {rid for f in failures_by[wid] for rid in f.request_ids}
+                    for rep in lane_reports:
+                        done.update(rep.request_ids)
+                    for bi, batch in enumerate(iter_entry_batches(
+                            sorted(by_worker[wid], key=lambda e: e.order))):
+                        rids = [e.request.rid for e in batch]
+                        if not done.intersection(rids):
+                            failures_by[wid].append(BatchFailure(
+                                worker=wid, request_ids=rids, model=batch[0].model,
+                                kind="lane", batch_index=bi, error=repr(err)))
+                    lane_reports = []
+                else:
+                    raise
             reports.extend(lane_reports)
             failures.extend(failures_by[wid])
         self.wall_s += time.perf_counter() - t0
+        if errors:
+            raise errors[min(errors)]
         return PoolOutcome(reports=reports, failures=failures, timed_out=timed_out)
 
 

@@ -69,6 +69,10 @@ class ServeStats:
     fallbacks: int = 0
     quarantined_workers: int = 0
     realized_over_profiled: dict = dataclasses.field(default_factory=dict)
+    # Per-variant latency provenance ({model name -> profiled|costmodel|
+    # realized}): which kind of estimate ``realized_over_profiled`` is
+    # correcting for the variants this server schedules.
+    profile_provenance: dict = dataclasses.field(default_factory=dict)
 
     @property
     def worker_utilization(self) -> dict:
@@ -108,6 +112,7 @@ class EdgeServer:
         health=False,
         retry_budget: int = 2,
         lane_timeout_s: float | None = None,
+        backend=None,
     ):
         """``workers`` (a sequence of ``core.multiworker.Worker``) switches
         scheduling to §VII multi-worker placement; without it the policy
@@ -144,9 +149,23 @@ class EdgeServer:
         recorded violation), and the tracker's realized/committed EWMA
         feeds latency-scale drift corrections and quarantine masks back
         into the next window's scheduling.  Both default off; the
-        defaults leave every existing path bit-identical."""
+        defaults leave every existing path bit-identical.
+
+        ``backend`` (a ``serving.backends.ExecutorBackend``) selects the
+        execution substrate without hand-building an executor: an
+        ``LMExecutor`` is wrapped around it, and — because a non-default
+        backend knows its variants' true footprints — the scheduler's
+        capacity-aware residency sizes are re-registered from
+        ``backend.model_bytes`` (weights + KV cache) instead of the
+        asserted ``ModelProfile.memory_bytes`` constants.  Mutually
+        exclusive with ``executor``; with neither passed (the default)
+        nothing changes."""
         self.apps = dict(apps)
         self.policy = policy
+        if backend is not None:
+            if executor is not None:
+                raise ValueError("pass either executor=... or backend=..., not both")
+            executor = LMExecutor(capacity_bytes=memory_capacity_bytes, backend=backend)
         self.executor = executor
         self.sneakpeeks = sneakpeeks
         self.short_circuit = short_circuit
@@ -213,6 +232,23 @@ class EdgeServer:
             worker_ids=[w.wid for w in self.workers] if self.workers else None,
         )
         self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
+        self.stats.profile_provenance = {
+            m.name: m.provenance
+            for app in self._eff_apps.values()
+            for m in app.models
+        }
+        # A non-default backend knows the true per-variant footprint
+        # (weights + KV cache), so the scheduler's capacity-aware LRU
+        # sizes come from it rather than the asserted profile constants.
+        # The default ProfiledBackend does NOT re-register: its sizes are
+        # weight-only and the pre-backend behavior kept the profiles' —
+        # bit-identical defaults.
+        exec_backend = getattr(self.executor, "backend", None)
+        if exec_backend is not None and exec_backend.provenance != "profiled":
+            self.state.register_sizes({
+                name: int(exec_backend.model_bytes(name))
+                for name in exec_backend.variants
+            })
         self._pipeline = None
         if pipeline:
             from repro.core.pipeline import WindowPipeline

@@ -1,0 +1,57 @@
+"""Docs reference hygiene: every repo path the markdown docs point at
+must exist in this checkout, and nothing may reference the retrieval
+container's ``/root/related`` staging area (it is not part of the repo).
+
+This is the check the docs-smoke philosophy implies: docs that name
+files which do not exist rot silently; here they fail tier-1.
+"""
+import re
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# Markdown files whose path references we hold to the exists-check.
+DOC_FILES = [
+    "README.md",
+    "ROADMAP.md",
+    "SNIPPETS.md",
+    "CHANGES.md",
+    "docs/ARCHITECTURE.md",
+]
+
+# A reference is checked when it starts with one of the repo's top-level
+# code/artifact directories.  Bare module names, URLs and prose are not
+# path references.
+_TOP_DIRS = ("src/", "docs/", "examples/", "benchmarks/", "tests/", "results/")
+
+# `code spans` and (markdown/links) both carry path references.
+_CODE_RE = re.compile(r"`([^`]+)`|\]\(([^)#]+)(?:#[^)]*)?\)")
+
+
+def _candidate_paths(text):
+    for m in _CODE_RE.finditer(text):
+        ref = (m.group(1) or m.group(2)).strip()
+        # Strip :line / :line-range suffixes and trailing punctuation.
+        ref = re.sub(r":[0-9][0-9,\-:]*$", "", ref).rstrip(".,;")
+        if not ref.startswith(_TOP_DIRS):
+            continue
+        # Skip templated/globbed mentions ({arch}, *, <placeholder>).
+        if any(ch in ref for ch in "{}*<>$[] "):
+            continue
+        yield ref
+
+
+def test_no_references_to_retrieval_staging_area():
+    for doc in DOC_FILES:
+        text = (REPO / doc).read_text()
+        assert "/root/related" not in text, f"{doc} references /root/related"
+
+
+def test_all_doc_path_references_exist():
+    missing = []
+    for doc in DOC_FILES:
+        text = (REPO / doc).read_text()
+        for ref in _candidate_paths(text):
+            if not (REPO / ref).exists():
+                missing.append(f"{doc} -> {ref}")
+    assert not missing, "docs reference paths absent from the repo:\n" + "\n".join(missing)
