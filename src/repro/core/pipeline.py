@@ -80,6 +80,22 @@ __all__ = [
 
 _PIPELINE_BACKEND = "auto"
 _PENALTY_ID = {"step": 0, "linear": 1, "sigmoid": 2, "none": 3}
+# Scan unroll factors, audited against the chunked programs (the bench
+# artifact records the measured rationale — benchmarks/sched_bench.py
+# emits an "unroll" block).  The sequential selection scans carry one
+# utility tile per step, so unrolling mostly amortizes loop overhead:
+# the per-request body is smallest (one (M,) tile) and takes the largest
+# factor; the grouped/multi-worker bodies carry (B, M)/(W, B, M) tiles,
+# so a lower factor keeps compile time flat for the same throughput.
+# The chunked carry-reconstruction chains are scalar-cheap and sit
+# inside a while_loop whose cost is dominated by the two batched tiles
+# per round — a moderate unroll is enough there.
+_UNROLL = {
+    "per_request": 8,
+    "grouped": 4,
+    "multiworker": 4,
+    "chunk_chain": 4,
+}
 # Compiled window programs keyed by static configuration; jit's own cache
 # then keys on array shapes, so steady streaming windows recompile once.
 _PROGRAMS: dict = {}
@@ -202,7 +218,193 @@ def _sequential_mean(tile, mask, size, axis):
     return s / size
 
 
-def _per_request_program(key, ordering, selection, data_aware, app_static, res_mode):
+def _chunk_member_mean(tile, mask, size):
+    """Batched form of ``_sequential_mean`` for a leading chunk axis:
+    masked member mean over axis -2 of a (..., B, M) tile with the SCALAR
+    summation order (member by member, masked members contributing exact
+    zero adds), so each chunk row reduces bit-for-bit like the sequential
+    program's per-step mean.  ``mask``/``size`` must already broadcast
+    against the tile with the member axis at -1/-(absent)."""
+    import jax
+    import jax.numpy as jnp
+
+    b_max = tile.shape[-2]
+    zero = jnp.zeros_like(tile[..., 0, :])
+    if b_max <= 64:
+        s = zero
+        for j in range(b_max):
+            s = s + tile[..., j, :] * mask[..., j, None]
+        return s / size[..., None]
+    s = jax.lax.fori_loop(
+        0, b_max, lambda j, acc: acc + tile[..., j, :] * mask[..., j, None], zero
+    )
+    return s / size[..., None]
+
+
+def _spec_select(chunk, res_mode, n_total, t, res, sizes, cap, tabs, score,
+                 fixed_sel=None):
+    """Speculate-K/validate/fallback selection over a single carry — the
+    chunked core shared by the per-request and grouped programs.
+
+    The sequential scans exist because every Eq. 13 decision moves the
+    carry (queue-tail time ``t``, residency ``res``).  This driver
+    amortizes that dependence the way speculative decoding amortizes
+    autoregression.  ``tabs`` holds per-position tables padded to
+    ``n_total + chunk`` rows (``fastpath.chunk_layout``): "swap" / "lat"
+    / "gid" / "valid" model rows plus whatever ``score`` consumes.  Each
+    round of the while loop:
+
+      1. SPECULATE — score all ``chunk`` positions against the carry
+         FROZEN at the chunk boundary: ONE batched utility tile instead
+         of ``chunk`` sequential tiles.  (``fixed_sel`` names a table of
+         precomputed decisions and skips this pass entirely — MaxAcc's
+         selection is carry-independent.)
+      2. RECONSTRUCT — the sequential carries the speculated decisions
+         imply: a ``chunk``-step scalar chain keeping the scan's exact
+         float association ``(t + swap) + lat`` (plus the compiled LRU
+         slot updates in "lru" mode) — cheap, no utility tiles.
+      3. VALIDATE — re-decide all positions under the reconstructed
+         carries with a second batched tile.  Position k's carry is
+         exact iff every speculated decision before k matched, so the
+         accepted prefix runs through the FIRST conflict — inclusive:
+         the conflicting position's own carry is still exact, so its
+         validation decision is final (speculative decoding's bonus
+         token).
+      4. FALLBACK — advance by the accepted prefix only; the next round
+         re-speculates from the first stale position under its now-
+         exact carry.  Every round accepts >= 1 decision, so the loop
+         ends within ``n_total`` rounds (exactly ``ceil(n/chunk)`` when
+         nothing conflicts).
+
+    Returns ``(sel, starts, lats, stats)`` (stats = stacked int64[2]
+    ``[rounds, conflicts]``, one transfer) over the real
+    ``n_total`` positions.  Bit-identical to the sequential scan by
+    induction: accepted positions' carries are exact, and their
+    validation decisions/outputs use the same elementwise float
+    associations, first-max argmax and residency rule as the scan step.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n_pad = tabs["gid"].shape[0]  # n_total + chunk (fastpath.chunk_layout)
+
+    def pick(tab, j):
+        return jnp.take_along_axis(tab, j[:, None], axis=1)[:, 0]
+
+    def decide(sl, tb, res_rep):
+        # One batched Eq. 13 tile: the scan step's candidate scoring for
+        # all chunk positions at once.  ``tb`` broadcasts the queue-tail
+        # time per position, ``res_rep`` the residency per position;
+        # (t + swap) + lat is the scan step's float association,
+        # elementwise.
+        swap_eff = jnp.where(res_rep, 0.0, sl["swap"])
+        comp = (tb + swap_eff) + sl["lat"]
+        u = score(sl, comp)
+        return jnp.argmax(jnp.where(sl["valid"], u, -jnp.inf), axis=1), swap_eff
+
+    def body(carry):
+        p, t, res, osel, ostart, olat, rounds, conflicts = carry
+        sl = {
+            k: jax.lax.dynamic_slice_in_dim(v, p, chunk, axis=0)
+            for k, v in tabs.items()
+        }
+
+        # 1. Speculate under the frozen boundary carry.
+        if fixed_sel is not None:
+            j_spec = sl[fixed_sel]
+        else:
+            if res_mode == "slot1":
+                res_rep0 = sl["gid"] == res
+            else:
+                res_rep0 = (sl["gid"][:, :, None] == res[None, None, :]).any(-1)
+            j_spec, _ = decide(sl, t, res_rep0)
+        swap_sel = pick(sl["swap"], j_spec)
+        lat_sel = pick(sl["lat"], j_spec)
+        gid_sel = pick(sl["gid"], j_spec)
+
+        # 2. Reconstruct the implied sequential carries (scalar chain).
+        if res_mode == "slot1":
+            res_states = jnp.concatenate([res[None], gid_sel[:-1]])
+            sw_chain = jnp.where(gid_sel == res_states, 0.0, swap_sel)
+
+            def tstep(tc, x):
+                sw, lt = x
+                return (tc + sw) + lt, tc
+
+            _, t_vec = jax.lax.scan(
+                tstep, t, (sw_chain, lat_sel), unroll=_UNROLL["chunk_chain"]
+            )
+        else:
+
+            def rstep(c, x):
+                tc, rc = c
+                gk, sk, lk = x
+                sw = jnp.where((rc == gk).any(), 0.0, sk)
+                rn, _ = _touch_residency(rc, gk, sizes, cap)
+                return ((tc + sw) + lk, rn), (tc, rc)
+
+            _, (t_vec, res_states) = jax.lax.scan(
+                rstep, (t, res), (gid_sel, swap_sel, lat_sel),
+                unroll=_UNROLL["chunk_chain"],
+            )
+
+        # 3. Validate under the reconstructed carries.
+        if res_mode == "slot1":
+            res_rep = sl["gid"] == res_states[:, None]
+        else:
+            res_rep = (sl["gid"][:, :, None] == res_states[:, None, :]).any(-1)
+        if fixed_sel is not None:
+            j_true = j_spec
+            swap_eff = jnp.where(res_rep, 0.0, sl["swap"])
+        else:
+            j_true, swap_eff = decide(sl, t_vec[:, None], res_rep)
+        comp_fin = (t_vec + pick(swap_eff, j_true)) + pick(sl["lat"], j_true)
+
+        # 4. Accept through the first conflict (inclusive: its carry was
+        # still exact), clamped to the real positions left — padded rows
+        # always match (all-(-inf) utilities, argmax 0 in both passes)
+        # and can never be accepted past the clamp.
+        mism = j_true != j_spec
+        any_m = mism.any()
+        first = jnp.argmax(mism).astype(p.dtype)
+        a = jnp.minimum(jnp.where(any_m, first + 1, chunk), n_total - p)
+
+        osel = jax.lax.dynamic_update_slice_in_dim(
+            osel, j_true.astype(osel.dtype), p, 0
+        )
+        ostart = jax.lax.dynamic_update_slice_in_dim(ostart, t_vec, p, 0)
+        olat = jax.lax.dynamic_update_slice_in_dim(olat, comp_fin - t_vec, p, 0)
+
+        # Next boundary carry: the last ACCEPTED true decision applied to
+        # its (exact) pre-state.
+        t_next = comp_fin[a - 1]
+        g_last = pick(sl["gid"], j_true)[a - 1]
+        if res_mode == "slot1":
+            res_next = g_last
+        else:
+            res_next, _ = _touch_residency(res_states[a - 1], g_last, sizes, cap)
+        return (p + a, t_next, res_next, osel, ostart, olat,
+                rounds + 1, conflicts + any_m.astype(conflicts.dtype))
+
+    init = (
+        jnp.asarray(0, jnp.int64),
+        jnp.asarray(t, jnp.float64),
+        jnp.asarray(res),
+        jnp.zeros(n_pad, jnp.int64),
+        jnp.zeros(n_pad, jnp.float64),
+        jnp.zeros(n_pad, jnp.float64),
+        jnp.asarray(0, jnp.int64),
+        jnp.asarray(0, jnp.int64),
+    )
+    out = jax.lax.while_loop(lambda c: c[0] < n_total, body, init)
+    _, _, _, osel, ostart, olat, rounds, conflicts = out
+    # Stacked stats -> one device->host transfer on the caller side.
+    return (osel[:n_total], ostart[:n_total], olat[:n_total],
+            jnp.stack([rounds, conflicts]))
+
+
+def _per_request_program(key, ordering, selection, data_aware, app_static, res_mode,
+                         chunk=0):
     """One fused jitted program: Eq. 9/12 -> ordering -> Eq. 2/13 scan.
 
     ``app_static`` is a tuple of (num_models, has_theta) per application —
@@ -254,6 +456,40 @@ def _per_request_program(key, ordering, selection, data_aware, app_static, res_m
                 jnp.where(valid_tab[app_id], acc, -jnp.inf), axis=1
             )
 
+        if chunk:
+            # Speculative chunked selection: reorder the per-position
+            # tables up front (the scan gathers per step instead) and pad
+            # chunk inert rows (fastpath.chunk_layout's encoding).
+            aid_o = app_id[order]
+
+            def padr(x, cv=0):
+                return jnp.pad(
+                    x, [(0, chunk)] + [(0, 0)] * (x.ndim - 1), constant_values=cv
+                )
+
+            tabs = {
+                "acc": padr(acc[order]),
+                "dl": padr(deadlines[order], 1.0),
+                "pen": padr(pen_tab[aid_o]),
+                "swap": padr(swap_tab[aid_o]),
+                "lat": padr(lat1_tab[aid_o]),
+                "gid": padr(gid_tab[aid_o], -2),
+                "valid": padr(valid_tab[aid_o]),
+            }
+            fixed = None
+            if selection == "max_accuracy":
+                tabs["sel"] = padr(sel_all[order])
+                fixed = "sel"
+
+            def score(sl, comp):
+                gam = _penalty_jnp(sl["pen"][:, None], sl["dl"][:, None], comp)
+                return sl["acc"] * (1.0 - jnp.clip(gam, 0.0, 1.0))
+
+            sel, starts, lats, stats = _spec_select(
+                chunk, res_mode, n_total, t0, res0, sizes, cap, tabs, score, fixed
+            )
+            return order, sel, starts, lats, stats
+
         def step(carry, g):
             t, res = carry
             aid = app_id[g]
@@ -280,7 +516,9 @@ def _per_request_program(key, ordering, selection, data_aware, app_static, res_m
                 res, _ = _touch_residency(res, gid_row[j], sizes, cap)
             return (comp, res), (j, t, comp - t)
 
-        _, (sel, starts, lats) = jax.lax.scan(step, (t0, res0), order, unroll=8)
+        _, (sel, starts, lats) = jax.lax.scan(
+            step, (t0, res0), order, unroll=_UNROLL["per_request"]
+        )
         return order, sel, starts, lats
 
     prog = jax.jit(program)
@@ -288,11 +526,12 @@ def _per_request_program(key, ordering, selection, data_aware, app_static, res_m
     return prog
 
 
-def _grouped_program(res_mode):
+def _grouped_program(res_mode, chunk=0):
     """Jitted scan over ordered groups: one greedy Eq. 13 tile per step.
     ``res_mode`` statically picks the residency carry ("slot1" | "lru"),
-    exactly as in ``_per_request_program``."""
-    key = ("grouped", res_mode)
+    exactly as in ``_per_request_program``; ``chunk`` > 0 swaps the scan
+    for the speculative chunked driver (``_spec_select``)."""
+    key = ("grouped", res_mode, chunk)
     prog = _PROGRAMS.get(key)
     if prog is not None:
         return prog
@@ -301,6 +540,38 @@ def _grouped_program(res_mode):
 
     def program(t0, res0, gsizes, cap, acc, member_mask, deadlines, sizes,
                 lat_tab, swap_tab, gid_tab, valid_tab, pen_tab):
+        if chunk:
+
+            def padr(x, cv=0):
+                return jnp.pad(
+                    x, [(0, chunk)] + [(0, 0)] * (x.ndim - 1), constant_values=cv
+                )
+
+            tabs = {
+                "acc": padr(acc),
+                "mask": padr(member_mask),
+                "dl": padr(deadlines, 1.0),
+                # Pad sizes/deadlines with 1.0 so inert rows divide and
+                # penalize cleanly (their utilities mask to -inf anyway).
+                "size": padr(sizes, 1.0),
+                "pen": padr(pen_tab),
+                "swap": padr(swap_tab),
+                "lat": padr(lat_tab),
+                "gid": padr(gid_tab, -2),
+                "valid": padr(valid_tab),
+            }
+
+            def score(sl, comp):
+                gam = _penalty_jnp(
+                    sl["pen"][:, None, None], sl["dl"][:, :, None], comp[:, None, :]
+                )
+                tile = sl["acc"] * (1.0 - jnp.clip(gam, 0.0, 1.0))
+                return _chunk_member_mean(tile, sl["mask"], sl["size"])
+
+            return _spec_select(
+                chunk, res_mode, acc.shape[0], t0, res0, gsizes, cap, tabs, score
+            )
+
         def step(carry, g):
             t, res = carry
             gid_row = gid_tab[g]
@@ -326,7 +597,7 @@ def _grouped_program(res_mode):
 
         n_groups = acc.shape[0]
         _, (sel, starts, lats) = jax.lax.scan(
-            step, (t0, res0), jnp.arange(n_groups), unroll=4
+            step, (t0, res0), jnp.arange(n_groups), unroll=_UNROLL["grouped"]
         )
         return sel, starts, lats
 
@@ -335,7 +606,7 @@ def _grouped_program(res_mode):
     return prog
 
 
-def _multiworker_program(res_mode):
+def _multiworker_program(res_mode, chunk=0):
     """Compiled Eq. 15 placement: a jitted scan over the priority-ordered
     groups whose body scores the full (worker, model) utility tile, picks
     the argmax under the shared tie-break (utility, -scaled latency,
@@ -344,8 +615,18 @@ def _multiworker_program(res_mode):
     One generic program serves every pool: the pool/app structure is data
     (jit re-specializes on shapes only); ``res_mode`` statically picks
     the per-worker residency carry ("slot1" | "lru").
+
+    ``chunk`` > 0 runs the speculate-K/validate/fallback rounds of
+    ``_spec_select`` over the POOL carry (per-worker busy-until vector +
+    per-worker residency): the speculation/validation tiles grow a
+    leading chunk axis to (K, W, B, M), the flattened (worker, model)
+    pick goes through the per-group preference permutation row-wise (the
+    same first-max tie-break), and the reconstruction chain replays the
+    speculated picks through ``t.at[wi].set`` / per-worker residency
+    touches — the per-worker carry permits exactly the same accepted-
+    prefix induction as the single-worker driver.
     """
-    key = ("multiworker", res_mode)
+    key = ("multiworker", res_mode, chunk)
     prog = _PROGRAMS.get(key)
     if prog is not None:
         return prog
@@ -355,6 +636,12 @@ def _multiworker_program(res_mode):
     def program(t0, res0, wsizes, cap, acc, member_mask, deadlines, bsizes,
                 app_id, lat_tab, sswap, gid_tab, valid_tab, pen_tab, pref_tab):
         m_max = gid_tab.shape[1]
+        if chunk:
+            return _spec_select_mw(
+                chunk, res_mode, t0, res0, wsizes, cap, acc, member_mask,
+                deadlines, bsizes, app_id, lat_tab, sswap, gid_tab, valid_tab,
+                pen_tab, pref_tab,
+            )
 
         def step(carry, g):
             t, res = carry
@@ -392,13 +679,166 @@ def _multiworker_program(res_mode):
 
         n_groups = acc.shape[0]
         _, (wsel, sel, starts, lats) = jax.lax.scan(
-            step, (t0, res0), jnp.arange(n_groups), unroll=4
+            step, (t0, res0), jnp.arange(n_groups), unroll=_UNROLL["multiworker"]
         )
         return wsel, sel, starts, lats
 
     prog = jax.jit(program)
     _PROGRAMS[key] = prog
     return prog
+
+
+def _spec_select_mw(chunk, res_mode, t0, res0, wsizes, cap, acc, member_mask,
+                    deadlines, bsizes, app_id, lat_tab, sswap, gid_tab,
+                    valid_tab, pen_tab, pref_tab):
+    """The multi-worker form of ``_spec_select``: speculate-K/validate/
+    fallback over the POOL carry (per-worker busy-until times + per-
+    worker residency).  Same induction, same bit-exactness argument —
+    only the carry, the (K, W, B, M) tiles and the flattened
+    (worker, model) pick differ from the single-worker driver."""
+    import jax
+    import jax.numpy as jnp
+
+    m_max = gid_tab.shape[1]
+    n_total = acc.shape[0]
+    kk = jnp.arange(chunk)
+
+    def padr(x, cv=0):
+        return jnp.pad(x, [(0, chunk)] + [(0, 0)] * (x.ndim - 1), constant_values=cv)
+
+    tabs = {
+        "acc": padr(acc),
+        "mask": padr(member_mask),
+        "dl": padr(deadlines, 1.0),
+        "bsize": padr(bsizes, 1.0),
+        "lat": padr(lat_tab),
+        "sswap": padr(sswap[app_id]),
+        "gid": padr(gid_tab[app_id], -2),
+        "valid": padr(valid_tab[app_id]),
+        "pen": padr(pen_tab[app_id]),
+        "pref": padr(pref_tab[app_id]),
+    }
+    n_pad = n_total + chunk
+
+    def decide(sl, tb, res_rep):
+        # (K, W, M) effective swaps/completions, (K, W, B, M) Eq. 13
+        # tiles reduced by the scalar-order member mean, then the
+        # row-wise first-max pick over the preference permutation —
+        # exactly the sequential step's ops with a leading chunk axis.
+        swap_eff = jnp.where(res_rep, 0.0, sl["sswap"])
+        comp = (tb + swap_eff) + sl["lat"]
+        gam = _penalty_jnp(
+            sl["pen"][:, None, None, None],
+            sl["dl"][:, None, :, None],
+            comp[:, :, None, :],
+        )
+        tile = sl["acc"][:, None, :, :] * (1.0 - jnp.clip(gam, 0.0, 1.0))
+        u_mean = _chunk_member_mean(tile, sl["mask"][:, None, :], sl["bsize"][:, None])
+        u_flat = jnp.where(
+            sl["valid"][:, None, :], u_mean, -jnp.inf
+        ).reshape(chunk, -1)
+        u_pref = jnp.take_along_axis(u_flat, sl["pref"], axis=1)
+        idx = jnp.argmax(u_pref, axis=1)
+        picks = jnp.take_along_axis(sl["pref"], idx[:, None], axis=1)[:, 0]
+        return picks, swap_eff
+
+    def body(carry):
+        p, t, res, owsel, osel, ostart, olat, rounds, conflicts = carry
+        sl = {
+            k: jax.lax.dynamic_slice_in_dim(v, p, chunk, axis=0)
+            for k, v in tabs.items()
+        }
+
+        # 1. Speculate under the frozen boundary pool state.
+        if res_mode == "slot1":
+            res_rep0 = res[None, :, None] == sl["gid"][:, None, :]
+        else:
+            res_rep0 = (
+                res[None, :, None, :] == sl["gid"][:, None, :, None]
+            ).any(-1)
+        pick_s, _ = decide(sl, t[None, :, None], res_rep0)
+        wi_s, mi_s = pick_s // m_max, pick_s % m_max
+        gid_s = jnp.take_along_axis(sl["gid"], mi_s[:, None], axis=1)[:, 0]
+        sw_s = sl["sswap"][kk, wi_s, mi_s]
+        lt_s = sl["lat"][kk, wi_s, mi_s]
+
+        # 2. Reconstruct the implied pool states (scalar chain).
+        def rstep(c, x):
+            tc, rc = c
+            wk, gk, sk, lk = x
+            if res_mode == "slot1":
+                was = rc[wk] == gk
+            else:
+                was = (rc[wk] == gk).any()
+            comp = (tc[wk] + jnp.where(was, 0.0, sk)) + lk
+            if res_mode == "slot1":
+                rn = rc.at[wk].set(gk)
+            else:
+                rw, _ = _touch_residency(rc[wk], gk, wsizes[wk], cap)
+                rn = rc.at[wk].set(rw)
+            return (tc.at[wk].set(comp), rn), (tc, rc)
+
+        _, (t_states, res_states) = jax.lax.scan(
+            rstep, (t, res), (wi_s, gid_s, sw_s, lt_s),
+            unroll=_UNROLL["chunk_chain"],
+        )
+
+        # 3. Validate under the reconstructed pool states.
+        if res_mode == "slot1":
+            res_rep = res_states[:, :, None] == sl["gid"][:, None, :]
+        else:
+            res_rep = (
+                res_states[:, :, :, None] == sl["gid"][:, None, None, :]
+            ).any(-2)
+        pick_t, swap_eff = decide(sl, t_states[:, :, None], res_rep)
+        wi_t, mi_t = pick_t // m_max, pick_t % m_max
+        gid_t = jnp.take_along_axis(sl["gid"], mi_t[:, None], axis=1)[:, 0]
+        start_t = t_states[kk, wi_t]
+        comp_fin = (start_t + swap_eff[kk, wi_t, mi_t]) + sl["lat"][kk, wi_t, mi_t]
+
+        # 4. Accept through the first conflict (inclusive), clamped.
+        mism = pick_t != pick_s
+        any_m = mism.any()
+        first = jnp.argmax(mism).astype(p.dtype)
+        a = jnp.minimum(jnp.where(any_m, first + 1, chunk), n_total - p)
+
+        owsel = jax.lax.dynamic_update_slice_in_dim(
+            owsel, wi_t.astype(owsel.dtype), p, 0
+        )
+        osel = jax.lax.dynamic_update_slice_in_dim(
+            osel, mi_t.astype(osel.dtype), p, 0
+        )
+        ostart = jax.lax.dynamic_update_slice_in_dim(ostart, start_t, p, 0)
+        olat = jax.lax.dynamic_update_slice_in_dim(olat, comp_fin - start_t, p, 0)
+
+        # Next boundary: the last ACCEPTED true pick applied to its
+        # (exact) pre-state.
+        wl = wi_t[a - 1]
+        t_next = t_states[a - 1].at[wl].set(comp_fin[a - 1])
+        res_last = res_states[a - 1]
+        if res_mode == "slot1":
+            res_next = res_last.at[wl].set(gid_t[a - 1])
+        else:
+            rw, _ = _touch_residency(res_last[wl], gid_t[a - 1], wsizes[wl], cap)
+            res_next = res_last.at[wl].set(rw)
+        return (p + a, t_next, res_next, owsel, osel, ostart, olat,
+                rounds + 1, conflicts + any_m.astype(conflicts.dtype))
+
+    init = (
+        jnp.asarray(0, jnp.int64),
+        jnp.asarray(t0, jnp.float64),
+        jnp.asarray(res0),
+        jnp.zeros(n_pad, jnp.int64),
+        jnp.zeros(n_pad, jnp.int64),
+        jnp.zeros(n_pad, jnp.float64),
+        jnp.zeros(n_pad, jnp.float64),
+        jnp.asarray(0, jnp.int64),
+        jnp.asarray(0, jnp.int64),
+    )
+    out = jax.lax.while_loop(lambda c: c[0] < n_total, body, init)
+    _, _, _, owsel, osel, ostart, olat, rounds, conflicts = out
+    return (owsel[:n_total], osel[:n_total], ostart[:n_total], olat[:n_total],
+            jnp.stack([rounds, conflicts]))
 
 
 # --------------------------------------------------------------------------
@@ -423,11 +863,18 @@ class WindowPipeline:
         policy=None,
         backend: str | None = None,
         workers=None,
+        chunk: int | None = None,
     ):
         """``workers`` (a sequence of ``multiworker.Worker``) switches the
         pipeline to the compiled Eq. 15 placement program: grouping /
         data-awareness / label-splitting come from the policy, placement
-        from the (worker, model) utility tiles."""
+        from the (worker, model) utility tiles.
+
+        ``chunk`` > 0 turns on speculative chunked selection (speculate-K
+        /validate/fallback rounds instead of the sequential scan —
+        bit-identical decisions, ``last_chunk_stats`` reports the
+        conflict rate); ``None`` defers to the policy's ``chunk`` field,
+        0 forces the sequential scan."""
         self.apps = apps
         self.sneakpeeks = sneakpeeks or {}
         self.policy = policy
@@ -435,6 +882,32 @@ class WindowPipeline:
             raise ValueError(f"unknown pipeline backend {backend!r}")
         self.backend = backend
         self.workers = list(workers) if workers else None
+        if chunk is not None and int(chunk) < 0:
+            raise ValueError(f"chunk must be >= 0, got {chunk}")
+        self.chunk = chunk
+        # Speculation stats of the LAST chunked schedule (None when the
+        # sequential scan or the numpy backend ran): chunk, decisions,
+        # rounds, conflicts, conflict_rate.
+        self.last_chunk_stats: dict | None = None
+
+    def _chunk_of(self, policy) -> int:
+        c = self.chunk if self.chunk is not None else getattr(policy, "chunk", 0)
+        c = int(c or 0)
+        if c < 0:
+            raise ValueError(f"chunk must be >= 0, got {c}")
+        return c
+
+    def _record_chunk_stats(self, chunk: int, decisions: int, stats) -> None:
+        # One device->host transfer for both counters (int() per traced
+        # scalar would sync twice).
+        rounds, conflicts = np.asarray(stats, dtype=np.int64).tolist()
+        self.last_chunk_stats = {
+            "chunk": int(chunk),
+            "decisions": int(decisions),
+            "rounds": rounds,
+            "conflicts": conflicts,
+            "conflict_rate": conflicts / rounds if rounds else 0.0,
+        }
 
     def resolved_backend(self) -> str:
         """The backend this pipeline will actually run ("jax" or "numpy")."""
@@ -481,6 +954,7 @@ class WindowPipeline:
             raise ValueError("WindowPipeline needs a policy (init arg or call arg)")
         workers = workers if workers is not None else self.workers
         t0 = time.perf_counter()
+        self.last_chunk_stats = None
         if not requests:
             return Schedule()
         if (lat_scale or worker_mask is not None) and not workers:
@@ -506,6 +980,7 @@ class WindowPipeline:
             sched = self._schedule_grouped_jax(policy, requests, now, state, arrays)
         else:
             sched = self._schedule_per_request_jax(policy, requests, now, state, arrays)
+        sched.chunk_stats = self.last_chunk_stats
         sched.scheduling_overhead_s = time.perf_counter() - t0
         return sched
 
@@ -616,6 +1091,32 @@ class WindowPipeline:
         while len(_TABLES) > _TABLES_MAX:
             _TABLES.pop(next(iter(_TABLES)))
         return ent
+
+    def _jax_tables(self, tab):
+        """Device-array versions of the window-independent per-app tables
+        (and the per-app static Eq. 9 inputs), built once per table-cache
+        entry under x64 so dtypes match the float64 programs — every
+        subsequent window skips the host->device conversions."""
+        jt = tab.get("jnp")
+        if jt is not None:
+            return jt
+        import jax.numpy as jnp
+
+        with self._enable_x64():
+            jt = {
+                k: jnp.asarray(tab[k]) for k in ("swap", "lat1", "gid", "valid", "pen")
+            }
+            jt["apps"] = {
+                name: (
+                    jnp.asarray(aa.R),
+                    jnp.asarray(aa.profiled),
+                    jnp.asarray(aa.sc),
+                    jnp.asarray(aa.tie_pref),
+                )
+                for name, aa in zip(tab["app_names"], tab["pin"])
+            }
+        tab["jnp"] = jt
+        return jt
 
     def _mw_tables(self, wa: WindowArrays, workers, pool):
         """Pool-scaled per-app model tables for the compiled Eq. 15
@@ -747,14 +1248,20 @@ class WindowPipeline:
 
         res_mode = pool.res_mode(state)
         res0 = pool.res[:, 0].copy() if res_mode == "slot1" else pool.res
-        prog = _multiworker_program(res_mode)
+        chunk = self._chunk_of(policy)
+        prog = _multiworker_program(res_mode, chunk)
         with self._enable_x64():
-            wsel, sel, starts, lats = prog(
+            out = prog(
                 pool.t, res0, pool.sizes, np.float64(pool.capacity),
                 acc, member_mask, deadlines, bsizes, app_id,
                 lat_tab, tab["sswap"], tab["gid"], tab["valid"], tab["pen"],
                 tab["pref"],
             )
+        if chunk:
+            wsel, sel, starts, lats, stats = out
+            self._record_chunk_stats(chunk, n_groups, stats)
+        else:
+            wsel, sel, starts, lats = out
         wsel = np.asarray(wsel)
         sel = np.asarray(sel)
         starts = np.asarray(starts)
@@ -800,6 +1307,11 @@ class WindowPipeline:
         app_names = tab["app_names"]
         n_total = len(wa.requests)
 
+        # Window-independent args live as committed device arrays in the
+        # table cache (_window_tables) — passing jax.Arrays into the jitted
+        # program skips the per-call host->device conversion that would
+        # otherwise run for every table on every window.
+        jt = self._jax_tables(tab)
         app_id = np.zeros(n_total, dtype=np.int64)
         per_app, app_static = [], []
         for ai, name in enumerate(app_names):
@@ -808,46 +1320,56 @@ class WindowPipeline:
             app_id[idx] = ai
             trows = wa._theta_rows[name]
             app_static.append((len(aa.names), bool(trows.size)))
+            r_j, prof_j, sc_j, pref_j = jt["apps"][name]
             per_app.append((
                 wa._theta_mat[name], trows, idx, wa.deadlines[idx] - float(now),
-                aa.R, aa.profiled, aa.sc, aa.tie_pref,
+                r_j, prof_j, sc_j, pref_j,
             ))
 
         t0, res0, sizes0, cap, res_mode = self._state_seed(wa, state, now)
+        chunk = self._chunk_of(policy)
         key = (
             "per_request", policy.ordering, policy.selection,
-            bool(policy.data_aware), tuple(app_static), res_mode,
+            bool(policy.data_aware), tuple(app_static), res_mode, chunk,
         )
         prog = _per_request_program(
             key, policy.ordering, policy.selection, bool(policy.data_aware),
-            tuple(app_static), res_mode,
+            tuple(app_static), res_mode, chunk,
         )
         with self._enable_x64():
-            order, sel, starts, lats = prog(
+            out = prog(
                 t0, res0, sizes0, cap, wa.deadlines, wa.arrivals,
                 np.asarray(wa.rids, dtype=np.int64), app_id,
-                tab["swap"], tab["lat1"], tab["gid"], tab["valid"], tab["pen"],
+                jt["swap"], jt["lat1"], jt["gid"], jt["valid"], jt["pen"],
                 per_app,
             )
+        if chunk:
+            order, sel, starts, lats, stats = out
+            self._record_chunk_stats(chunk, n_total, stats)
+        else:
+            order, sel, starts, lats = out
         order = np.asarray(order)
         local = tab["pref"][app_id[order], np.asarray(sel)]
-        starts = np.asarray(starts)
-        lats = np.asarray(lats)
+        # Host assembly off np scalars: bulk tolist() + local bindings —
+        # this loop runs once per request and shows up in the gated
+        # schedule-only bench cells, so keep it allocation-lean.
+        order_l = order.tolist()
+        local_l = local.tolist()
+        starts_l = np.asarray(starts).tolist()
+        lats_l = np.asarray(lats).tolist()
+        requests = wa.requests
+        app_of = wa.app_of
+        names = {name: wa.app_arrays[name].names for name in wa.req_idx}
 
-        entries = []
-        for k in range(n_total):
-            g = int(order[k])
-            aa = wa.app_arrays[wa.app_of[g]]
-            entries.append(
-                ScheduleEntry(
-                    request=wa.requests[g],
-                    model=aa.names[int(local[k])],
-                    order=k + 1,
-                    batch_id=-1,
-                    est_start_s=float(starts[k]),
-                    est_latency_s=float(lats[k]),
-                )
+        # Positional construction: (request, model, order, worker,
+        # batch_id, est_start_s, est_latency_s).
+        entries = [
+            ScheduleEntry(
+                requests[g], names[app_of[g]][local_l[k]], k + 1, 0, -1,
+                starts_l[k], lats_l[k],
             )
+            for k, g in enumerate(order_l)
+        ]
         sched = Schedule(entries=entries)
         sched.validate()
         return sched
@@ -923,12 +1445,18 @@ class WindowPipeline:
             pen_tab[gi] = _PENALTY_ID[aa.app.penalty]
 
         t0, res0, gsizes, cap, res_mode = self._state_seed(wa, state, now)
-        prog = _grouped_program(res_mode)
+        chunk = self._chunk_of(policy)
+        prog = _grouped_program(res_mode, chunk)
         with self._enable_x64():
-            sel, starts, lats = prog(
+            out = prog(
                 t0, res0, gsizes, cap, acc, member_mask, deadlines, sizes,
                 lat_tab, swap_tab, gid_tab, valid_tab, pen_tab,
             )
+        if chunk:
+            sel, starts, lats, stats = out
+            self._record_chunk_stats(chunk, n_groups, stats)
+        else:
+            sel, starts, lats = out
         sel = np.asarray(sel)
         starts = np.asarray(starts)
         lats = np.asarray(lats)
@@ -968,12 +1496,16 @@ def pipeline_schedule(
     workers=None,
     lat_scale=None,
     worker_mask=None,
+    chunk: int | None = None,
 ) -> Schedule:
     """One pipelined window pass for ``SchedulerPolicy.schedule`` /
     ``schedule_window`` (``workers`` selects the Eq. 15 placement
     program; ``lat_scale``/``worker_mask`` the closed-loop drift
-    corrections and health masking — multi-worker only)."""
-    return WindowPipeline(apps, policy=policy, backend=backend, workers=workers).schedule(
+    corrections and health masking — multi-worker only; ``chunk``
+    overrides the policy's speculative chunked selection knob)."""
+    return WindowPipeline(
+        apps, policy=policy, backend=backend, workers=workers, chunk=chunk
+    ).schedule(
         requests, now, state=state, arrays=arrays,
         lat_scale=lat_scale, worker_mask=worker_mask,
     )

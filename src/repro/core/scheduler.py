@@ -52,6 +52,12 @@ class SchedulerPolicy:
     # (``make_policy(name, pipeline=True)``).  Off by default; the numpy
     # fast path and the scalar loops remain the references.
     pipeline: bool = False
+    # Speculative chunked selection (pipeline only): > 0 replaces the
+    # sequential Eq. 13 scan with speculate-K/validate/fallback rounds of
+    # that size — bit-identical decisions, fewer sequential steps
+    # (``make_policy(name, pipeline=True, chunk=16)``).  0 keeps the
+    # sequential scan; ignored off the jax pipeline backend.
+    chunk: int = 0
 
     def schedule(
         self,

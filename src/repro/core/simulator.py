@@ -89,6 +89,10 @@ class Simulation:
         pool, the compiled Eq. 15 placement program).  The pipeline
         object persists across windows so streaming runs reuse the
         compiled programs.
+      chunk: speculative chunked selection size for the pipeline
+        (speculate-K/validate/fallback rounds — bit-identical decisions);
+        ``None`` defers to the policy's ``chunk`` field, 0 forces the
+        sequential scan.
     """
 
     def __init__(
@@ -105,6 +109,7 @@ class Simulation:
         prebatch: int = 0,
         prebatch_backend: str = "numpy",
         pipeline: bool = False,
+        chunk: int | None = None,
     ):
         self.policy = policy
         self.apps = dict(apps)
@@ -132,7 +137,7 @@ class Simulation:
             from repro.core.pipeline import WindowPipeline
 
             self._pipeline = WindowPipeline(
-                self._eff_apps, policy=policy, workers=self.workers
+                self._eff_apps, policy=policy, workers=self.workers, chunk=chunk
             )
         self.log: list[dict] = []
 

@@ -86,7 +86,7 @@ class Application:
         return out
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
     """An inference request r_i with deadline d_i (absolute seconds)."""
 
@@ -105,7 +105,7 @@ class Request:
         return self.deadline_s - now
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ScheduleEntry:
     """One scheduled inference: request -> (model, order, worker).
 
@@ -134,6 +134,10 @@ class Schedule:
 
     entries: list[ScheduleEntry] = dataclasses.field(default_factory=list)
     scheduling_overhead_s: float = 0.0
+    # Speculation stats when the window ran chunked selection
+    # (repro.core.pipeline with chunk > 0): {chunk, decisions, rounds,
+    # conflicts, conflict_rate}.  None on every other path.
+    chunk_stats: dict | None = None
 
     def __iter__(self):
         return iter(self.entries)
@@ -146,10 +150,23 @@ class Schedule:
         return sorted(self.entries, key=lambda e: (e.worker, e.order))
 
     def validate(self) -> None:
-        """Constraints 4-6: unique positive orders per worker, one model per request."""
+        """Constraints 4-6: unique positive orders per worker, one model per request.
+
+        C-level set/any passes on the happy path (validate runs on every
+        scheduled window); a violation falls back to the original scan to
+        raise the precise first offender.
+        """
+        entries = self.entries
+        n = len(entries)
+        if (
+            not any(e.order <= 0 for e in entries)
+            and len({e.request.rid for e in entries}) == n
+            and len({(e.worker, e.order) for e in entries}) == n
+        ):
+            return
         seen_req: set[int] = set()
         seen_order: set[tuple[int, int]] = set()
-        for e in self.entries:
+        for e in entries:
             if e.order <= 0:
                 raise ValueError(f"order must be positive, got {e.order}")
             if e.request.rid in seen_req:
@@ -159,3 +176,4 @@ class Schedule:
             if key in seen_order:
                 raise ValueError(f"duplicate order {key}")
             seen_order.add(key)
+        raise AssertionError("validate fast/slow paths disagree")

@@ -107,6 +107,7 @@ class EdgeServer:
         workers=None,
         memory_capacity_bytes: int | None = None,
         pipeline: bool = False,
+        chunk: int | None = None,
         preempt: bool = False,
         faults=None,
         health=False,
@@ -122,7 +123,9 @@ class EdgeServer:
         across windows) and COMPOSES with ``workers`` — placement then
         runs through the compiled Eq. 15 program — and with
         ``memory_capacity_bytes`` (capacity-aware LRU residency inside
-        the compiled selectors).
+        the compiled selectors).  ``chunk`` sizes the pipeline's
+        speculative chunked selection (bit-identical decisions; ``None``
+        defers to the policy's ``chunk`` field, 0 = sequential scan).
 
         ``executor`` may be a single ``LMExecutor`` or an
         ``ExecutorPool``; with ``workers`` set, a single executor is
@@ -255,7 +258,7 @@ class EdgeServer:
 
             self._pipeline = WindowPipeline(
                 self._eff_apps, sneakpeeks=sneakpeeks, policy=policy,
-                workers=self.workers,
+                workers=self.workers, chunk=chunk,
             )
 
     def submit(self, request: Request):

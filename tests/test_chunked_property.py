@@ -1,0 +1,297 @@
+"""Speculative chunked selection: bit-identity and stats properties.
+
+The speculate-K/validate/fallback rounds (``chunk > 0`` on the compiled
+window pipeline) must reproduce the sequential scan decision-for-decision
+— same selections, orderings, start times and latencies — across chunk
+sizes, residency modes (single-slot and capacity-LRU), carried streaming
+state, all five policies, and heterogeneous multi-worker pools.
+Adversarial windows (tight deadlines, single-slot residency thrash) force
+validation conflicts so the exact-fallback path is exercised, not just the
+all-accepted happy path.  Property tests randomize the window shape when
+``hypothesis`` is installed (requirements-dev.txt); the example-based
+matrix below runs everywhere.
+"""
+import numpy as np
+import pytest
+
+try:  # optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; example tests still run
+    from _hypothesis_stub import given, settings, st
+
+from repro.core import (
+    POLICY_NAMES,
+    StreamingState,
+    WindowPipeline,
+    Worker,
+    evaluate,
+    make_policy,
+)
+from repro.core.fastpath import chunk_layout
+from repro.core.scheduler import schedule_window
+from repro.core.sneakpeek import attach_sneakpeek
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+CHUNKS = [1, 4, 16, 999]  # 999 > any test window: single speculate-all round
+
+
+def _window(per_app=6, seed=0, theta="all", deadline_std_s=0.05):
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs = make_requests(
+        list(APP_SPECS.values()), per_app=per_app,
+        deadline_std_s=deadline_std_s, seed=seed,
+    )
+    if theta != "none":
+        attach_sneakpeek(reqs, apps, sneaks)
+        if theta == "some":
+            for r in reqs[::3]:
+                r.theta = None
+                r.evidence = None
+    return reqs, apps, sneaks
+
+
+def _sig(sched):
+    return [
+        (e.request.rid, e.model, e.order, e.batch_id, e.worker,
+         round(e.est_start_s, 12), round(e.est_latency_s, 12))
+        for e in sched.sorted_entries()
+    ]
+
+
+def _stats_ok(sched, n_decisions, chunk):
+    """Invariants of the speculation counters."""
+    stats = sched.chunk_stats
+    assert stats is not None
+    assert stats["chunk"] == chunk
+    assert stats["decisions"] == n_decisions
+    min_rounds, _ = chunk_layout(n_decisions, chunk) if n_decisions else (0, chunk)
+    # Every conflict costs at most one extra round; conflict-free runs take
+    # exactly ceil(n / chunk).
+    assert min_rounds <= stats["rounds"] <= max(n_decisions, min_rounds)
+    assert 0 <= stats["conflicts"] <= stats["rounds"]
+    assert 0.0 <= stats["conflict_rate"] <= 1.0
+    if stats["conflicts"] == 0:
+        assert stats["rounds"] == min_rounds
+
+
+# ------------------------------------------------------------- bit-identity
+
+
+@pytest.mark.parametrize("chunk", CHUNKS)
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_chunked_matches_sequential(policy, chunk):
+    """Chunked == sequential pipeline == numpy fast path, per policy."""
+    reqs, apps, _ = _window(per_app=6, seed=0, theta="all")
+    seq = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+    chk = make_policy(policy, pipeline=True, chunk=chunk).schedule(reqs, apps, 0.1)
+    fast = make_policy(policy).schedule(reqs, apps, 0.1)
+    assert _sig(chk) == _sig(seq) == _sig(fast)
+    assert seq.chunk_stats is None  # default off: no speculation ran
+
+
+@pytest.mark.parametrize("seed,theta", [(1, "some"), (2, "none"), (3, "all")])
+@pytest.mark.parametrize("policy", ["LO-EDF", "LO-Priority", "SneakPeek"])
+def test_chunked_window_shapes(policy, seed, theta):
+    """Chunk sweep over varying posterior coverage and seeds."""
+    reqs, apps, _ = _window(per_app=5, seed=seed, theta=theta)
+    seq = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+    for chunk in (1, 4, 999):
+        chk = make_policy(policy, pipeline=True, chunk=chunk).schedule(
+            reqs, apps, 0.1
+        )
+        assert _sig(chk) == _sig(seq), (policy, seed, theta, chunk)
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 16])
+@pytest.mark.parametrize("policy", ["LO-EDF", "LO-Priority"])
+def test_chunked_utilities_match(policy, chunk):
+    """Realized utilities agree to 1e-9 (same models, same completions)."""
+    reqs, apps, _ = _window(per_app=6, seed=4, theta="some")
+    seq = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+    chk = make_policy(policy, pipeline=True, chunk=chunk).schedule(reqs, apps, 0.1)
+    rs = evaluate(seq, apps, 0.1, acc_mode="oracle")
+    rc = evaluate(chk, apps, 0.1, acc_mode="oracle")
+    np.testing.assert_allclose(rc.utilities, rs.utilities, atol=1e-9, rtol=0)
+    np.testing.assert_allclose(rc.completions, rs.completions, atol=1e-9, rtol=0)
+    _stats_ok(chk, len(reqs), chunk)
+
+
+# ------------------------------------------------- carried state + residency
+
+
+@pytest.mark.parametrize("cap", [None, 512 * 2**20, 1])
+@pytest.mark.parametrize("policy", ["LO-EDF", "SneakPeek"])
+def test_chunked_carried_state_parity(policy, cap):
+    """Chunked speculation seeds the same carried queue tail + residency
+    (single-slot and capacity-LRU) as the sequential scan."""
+    reqs, apps, _ = _window(per_app=5, seed=0, theta="all")
+    states = [StreamingState(memory_capacity_bytes=cap) for _ in range(2)]
+    for st_ in states:
+        warm = make_policy(policy).schedule(reqs, apps, 0.1, state=st_)
+        evaluate(warm, apps, 0.1, state=st_)
+    reqs2, _, _ = _window(per_app=5, seed=1, theta="all")
+    seq = make_policy(policy, pipeline=True).schedule(
+        reqs2, apps, 0.2, state=states[0]
+    )
+    chk = make_policy(policy, pipeline=True, chunk=4).schedule(
+        reqs2, apps, 0.2, state=states[1]
+    )
+    assert _sig(chk) == _sig(seq)
+
+
+# ------------------------------------------------------------- multi-worker
+
+
+@pytest.mark.parametrize("pool", [
+    [Worker(0), Worker(1)],
+    [Worker(0, speed=1.5, load_scale=2.0), Worker(1), Worker(2, speed=0.5)],
+])
+@pytest.mark.parametrize("chunk", [1, 5, 999])
+def test_chunked_multiworker_parity(pool, chunk):
+    """The pool-carry speculation (per-worker tails + residency) matches
+    the sequential placement scan over heterogeneous workers."""
+    reqs, apps, sneaks = _window(per_app=5, seed=2, theta="all")
+    seq, _ = schedule_window(
+        make_policy("LO-EDF", pipeline=True), reqs, apps, 0.1,
+        sneakpeeks=sneaks, workers=pool,
+    )
+    chk, _ = schedule_window(
+        make_policy("LO-EDF", pipeline=True, chunk=chunk), reqs, apps, 0.1,
+        sneakpeeks=sneaks, workers=pool,
+    )
+    assert _sig(chk) == _sig(seq)
+    _stats_ok(chk, len(reqs), chunk)
+
+
+# ------------------------------------------------------------- adversarial
+
+
+def test_adversarial_tight_deadlines_conflicts():
+    """Tight, high-variance deadlines make the frozen-carry utilities
+    diverge from the true-carry ones — speculation must detect the
+    conflicts and still produce the exact sequential schedule."""
+    total_conflicts = 0
+    for seed in range(8):
+        reqs, apps, _ = _window(
+            per_app=7, seed=seed, theta="all", deadline_std_s=0.01
+        )
+        # Deadlines ~60ms out: the growing queue tail crosses them
+        # mid-chunk, so the frozen-t sigmoid penalties (and argmaxes) go
+        # stale before the chunk ends.
+        now = float(np.median([r.deadline_s for r in reqs])) - 0.06
+        for policy in ("LO-EDF", "LO-Priority"):
+            seq = make_policy(policy, pipeline=True).schedule(reqs, apps, now)
+            chk = make_policy(policy, pipeline=True, chunk=4).schedule(
+                reqs, apps, now
+            )
+            assert _sig(chk) == _sig(seq), (policy, seed)
+            _stats_ok(chk, len(reqs), 4)
+            total_conflicts += chk.chunk_stats["conflicts"]
+    # At least one window must actually have exercised the fallback path.
+    assert total_conflicts > 0
+
+
+def test_adversarial_residency_thrash_identity():
+    """Single-slot and tiny-capacity LRU thrash: consecutive picks
+    alternate apps, so the frozen resident-model flags are wrong for most
+    of the chunk.  The reconstruction chain must replay the exact eviction
+    sequence — decisions stay bit-identical even though every speculated
+    row saw stale residency.  (Residency staleness alone does not flip
+    argmaxes in these windows — swap deltas are small against the utility
+    gaps — so no conflict floor is asserted here; the deadline test above
+    covers the fallback path.)"""
+    for cap in (None, 1):
+        for seed in range(4):
+            reqs, apps, _ = _window(per_app=6, seed=seed, theta="none")
+            st_seq = StreamingState(memory_capacity_bytes=cap)
+            st_chk = StreamingState(memory_capacity_bytes=cap)
+            for st_ in (st_seq, st_chk):
+                warm = make_policy("LO-Priority").schedule(
+                    reqs, apps, 0.1, state=st_
+                )
+                evaluate(warm, apps, 0.1, state=st_)
+            reqs2, _, _ = _window(per_app=6, seed=seed + 10, theta="none")
+            seq = make_policy("LO-Priority", pipeline=True).schedule(
+                reqs2, apps, 0.2, state=st_seq
+            )
+            chk = make_policy("LO-Priority", pipeline=True, chunk=8).schedule(
+                reqs2, apps, 0.2, state=st_chk
+            )
+            assert _sig(chk) == _sig(seq), (cap, seed)
+            _stats_ok(chk, len(reqs2), 8)
+
+
+# ------------------------------------------------------------------- stats
+
+
+def test_chunk_stats_shapes():
+    """Counter invariants across chunk sizes, incl. chunk > window."""
+    reqs, apps, _ = _window(per_app=5, seed=0, theta="all")
+    for chunk in (1, 3, 16, 999):
+        chk = make_policy("LO-EDF", pipeline=True, chunk=chunk).schedule(
+            reqs, apps, 0.1
+        )
+        _stats_ok(chk, len(reqs), chunk)
+    # chunk=1 speculation degenerates to the sequential scan: one decision
+    # per round, never a conflict (the frozen carry IS the true carry).
+    one = make_policy("LO-EDF", pipeline=True, chunk=1).schedule(reqs, apps, 0.1)
+    assert one.chunk_stats["conflicts"] == 0
+    assert one.chunk_stats["rounds"] == len(reqs)
+
+
+def test_chunk_flag_validation():
+    with pytest.raises(ValueError):
+        WindowPipeline({}, chunk=-1)
+    with pytest.raises(ValueError):
+        chunk_layout(10, 0)
+    assert chunk_layout(10, 4) == (3, 14)
+    assert chunk_layout(1, 999) == (1, 1000)
+
+
+def test_pipeline_chunk_override():
+    """WindowPipeline(chunk=...) overrides the policy flag; the policy
+    flag alone also turns speculation on."""
+    reqs, apps, _ = _window(per_app=4, seed=0, theta="all")
+    apps = dict(apps)
+    wp = WindowPipeline(apps, policy=make_policy("LO-EDF", pipeline=True), chunk=4)
+    s1 = wp.schedule(reqs, 0.1)
+    assert s1.chunk_stats is not None and s1.chunk_stats["chunk"] == 4
+    wp0 = WindowPipeline(apps, policy=make_policy("LO-EDF", pipeline=True, chunk=4))
+    s2 = wp0.schedule(reqs, 0.1)
+    assert s2.chunk_stats is not None and s2.chunk_stats["chunk"] == 4
+    assert _sig(s1) == _sig(s2)
+
+
+# ------------------------------------------------------------ property tests
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    per_app=st.integers(min_value=2, max_value=7),
+    seed=st.integers(min_value=0, max_value=50),
+    chunk=st.sampled_from([1, 2, 3, 5, 8, 16]),
+    policy=st.sampled_from(["LO-EDF", "LO-Priority", "SneakPeek"]),
+    theta=st.sampled_from(["all", "some", "none"]),
+)
+def test_property_chunked_bit_identity(per_app, seed, chunk, policy, theta):
+    reqs, apps, _ = _window(per_app=per_app, seed=seed, theta=theta)
+    seq = make_policy(policy, pipeline=True).schedule(reqs, apps, 0.1)
+    chk = make_policy(policy, pipeline=True, chunk=chunk).schedule(reqs, apps, 0.1)
+    assert _sig(chk) == _sig(seq)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=50),
+    chunk=st.sampled_from([2, 4, 8]),
+    std_ms=st.sampled_from([2, 4, 8]),
+)
+def test_property_adversarial_deadlines(seed, chunk, std_ms):
+    reqs, apps, _ = _window(
+        per_app=6, seed=seed, theta="all", deadline_std_s=std_ms / 1000.0
+    )
+    now = float(np.median([r.deadline_s for r in reqs])) - 0.06
+    seq = make_policy("LO-EDF", pipeline=True).schedule(reqs, apps, now)
+    chk = make_policy("LO-EDF", pipeline=True, chunk=chunk).schedule(reqs, apps, now)
+    assert _sig(chk) == _sig(seq)
+    _stats_ok(chk, len(reqs), chunk)
