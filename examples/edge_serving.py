@@ -50,20 +50,23 @@ def main():
         # multiple threads, so no shared generator state is mutated.
         return np.random.default_rng(req.rid).integers(0, vocab, 12).astype(np.int32)
 
-    server = EdgeServer(
-        {"assistant": app}, make_policy("Grouped"), executor=executor, prompt_fn=prompt_fn
-    )
-
     reqs = [
         Request(rid=i, app="assistant", arrival_s=0.01 * i,
                 deadline_s=0.01 * i + RNG.choice([0.08, 0.2, 0.5]), true_label=int(RNG.integers(2)))
         for i in range(12)
     ]
-    outs, stats = server.run(reqs)
+    # Context manager: releases the pool's lanes (and any process-lane
+    # workers) on exit.
+    with EdgeServer(
+        {"assistant": app}, make_policy("Grouped"), executor=executor, prompt_fn=prompt_fn
+    ) as server:
+        outs, stats = server.run(reqs)
 
     print("windows:", stats.windows, " requests:", stats.requests)
     print(f"mean utility {stats.mean_utility:.3f}  violations {stats.violations}  "
           f"weight swaps {stats.swaps}")
+    print(f"host scheduling wall {stats.sched_wall_s*1e3:.1f}ms  "
+          f"lane execution wall {stats.exec_wall_s*1e3:.1f}ms")
     for o in outs:
         for rep in o["reports"] or []:
             print(f"  batch[{rep.model:16s}] size={rep.batch_size} "
@@ -71,24 +74,26 @@ def main():
                   f"decode={rep.decode_s*1e3:6.1f}ms tokens={rep.tokens.shape}")
 
     print("\nmulti-worker pool: Eq. 15 placement + per-worker execution lanes")
-    pool_srv = EdgeServer(
-        {"assistant": app}, make_policy("LO-EDF"),
-        executor=LMExecutor(variants, new_tokens=3), prompt_fn=prompt_fn,
-        workers=[Worker(0), Worker(1, speed=2.0)],
-    )
     reqs = [
         Request(rid=100 + i, app="assistant", arrival_s=0.01 * i,
                 deadline_s=0.01 * i + RNG.choice([0.08, 0.2, 0.5]),
                 true_label=int(RNG.integers(2)))
         for i in range(12)
     ]
-    outs, stats = pool_srv.run(reqs)
-    print(f"windows: {stats.windows}  requests: {stats.requests}  "
-          f"mean utility {stats.mean_utility:.3f}")
-    for w in sorted(stats.worker_swaps):
-        print(f"  worker {w}: swaps={stats.worker_swaps[w]} "
-              f"busy={stats.pool_busy_s[w]*1e3:7.1f}ms "
-              f"(speed x{pool_srv.pool.lanes[w].worker.speed:g})")
+    with EdgeServer(
+        {"assistant": app}, make_policy("LO-EDF"),
+        executor=LMExecutor(variants, new_tokens=3), prompt_fn=prompt_fn,
+        workers=[Worker(0), Worker(1, speed=2.0)],
+    ) as pool_srv:
+        outs, stats = pool_srv.run(reqs)
+        print(f"windows: {stats.windows}  requests: {stats.requests}  "
+              f"mean utility {stats.mean_utility:.3f}")
+        print(f"host scheduling wall {stats.sched_wall_s*1e3:.1f}ms  "
+              f"lane execution wall {stats.exec_wall_s*1e3:.1f}ms")
+        for w in sorted(stats.worker_swaps):
+            print(f"  worker {w}: swaps={stats.worker_swaps[w]} "
+                  f"busy={stats.pool_busy_s[w]*1e3:7.1f}ms "
+                  f"(speed x{pool_srv.pool.lanes[w].worker.speed:g})")
     placed = {}
     for o in outs:
         for e in o["schedule"].entries:

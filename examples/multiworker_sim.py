@@ -96,21 +96,25 @@ def main():
         return np.random.default_rng(req.rid).integers(
             0, cfg.vocab_size, 8).astype(np.int32)
 
-    pool_srv = EdgeServer(
+    lm_reqs = [Request(rid=i, app="lm", arrival_s=0.01 * i, deadline_s=0.25,
+                       true_label=i % 2) for i in range(8)]
+    # Context manager: lane resources released on exit.
+    with EdgeServer(
         {"lm": lm_app}, make_policy("LO-EDF"),
         executor=LMExecutor({"small": (cfg, 0), "big": (cfg, 1)}, new_tokens=2),
         prompt_fn=prompt_fn, workers=[Worker(0), Worker(1, speed=2.0)],
-    )
-    lm_reqs = [Request(rid=i, app="lm", arrival_s=0.01 * i, deadline_s=0.25,
-                       true_label=i % 2) for i in range(8)]
-    _, pstats = pool_srv.run(lm_reqs)
-    util = pool_srv.pool.utilization()
-    for w in sorted(pstats.worker_swaps):
-        print(f"  worker {w}: swaps={pstats.worker_swaps[w]} "
-              f"busy={pstats.pool_busy_s[w]*1e3:6.1f}ms "
-              f"lane-utilization={util[w]:.2f}")
-    print(f"  total swaps={pstats.swaps} "
-          f"wall={pool_srv.pool.wall_s*1e3:.1f}ms")
+    ) as pool_srv:
+        _, pstats = pool_srv.run(lm_reqs)
+        util = pool_srv.pool.utilization()
+        for w in sorted(pstats.worker_swaps):
+            print(f"  worker {w}: swaps={pstats.worker_swaps[w]} "
+                  f"busy={pstats.pool_busy_s[w]*1e3:6.1f}ms "
+                  f"lane-utilization={util[w]:.2f}")
+        print(f"  total swaps={pstats.swaps} "
+              f"wall={pool_srv.pool.wall_s*1e3:.1f}ms")
+        print(f"  sched wall={pstats.sched_wall_s*1e3:.1f}ms "
+              f"exec wall={pstats.exec_wall_s*1e3:.1f}ms "
+              f"(overlap saved={pstats.overlap_saved_s*1e3:.1f}ms)")
 
     print("\nclosed loop: transient faults on the fast lane, retries + drift EWMA")
     from repro.serving import FaultPlan, FaultSpec

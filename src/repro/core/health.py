@@ -232,6 +232,20 @@ class HealthTracker:
             return None
         return lambda wid, model: scales.get((int(wid), model), 1.0)
 
+    def control_signature(self, workers: Sequence) -> tuple:
+        """Equality token over everything this tracker feeds BACK into
+        scheduling: the quarantine mask and the quantized drift scales.
+        The overlapped serving loop snapshots it before speculating a
+        window and compares after the previous window's outcome lands —
+        any change (new quarantine, cooldown release, EWMA movement past
+        a quantum) invalidates the speculative schedule."""
+        scales = self.latency_scale()
+        mask = self.active_wids(workers) if workers else None
+        return (
+            None if mask is None else frozenset(mask),
+            None if scales is None else tuple(sorted(scales.items())),
+        )
+
     def ratio_snapshot(self) -> dict[int, float]:
         """Per-worker realized/committed EWMA (1.0 before any signal) —
         the ``realized_over_profiled`` surface in ``ServeStats``."""

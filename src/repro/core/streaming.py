@@ -443,6 +443,20 @@ class StreamingState:
                 out.backlog[w] = batches
         return out
 
+    def signature(self) -> tuple:
+        """Cheap equality token over the committed pool AS SCHEDULING
+        INPUT: per-worker busy-until time and LRU residency order.  Two
+        states with equal signatures yield identical schedules for the
+        same request set (scheduling peeks exactly these fields) — the
+        overlapped serving loop compares the snapshot it speculated
+        against with the post-reconcile state to decide whether its
+        speculative schedule is still the synchronous decision.  Dispatch
+        marks and backlog membership are deliberately excluded: they
+        affect future preemption, never the current placement."""
+        return tuple(
+            (w, tl.t, tuple(tl._resident)) for w, tl in self.items()
+        )
+
     def clone(self) -> "StreamingState":
         """Deep copy for speculative scheduling: mutating the clone's
         timelines or backlog log leaves the committed state untouched

@@ -3,6 +3,7 @@ from repro.serving.backends import (
     CostModelBackend,
     ExecutorBackend,
     ProfiledBackend,
+    SimulatedBackend,
 )
 from repro.serving.faults import FaultInjector, FaultPlan, FaultSpec
 from repro.serving.profiles import (
@@ -14,11 +15,14 @@ from repro.serving.profiles import (
     load_dryrun_record,
 )
 from repro.serving.runtime import (
+    LANE_NAMES,
     BatchFailure,
     ExecutionReport,
     ExecutorPool,
     LMExecutor,
+    PendingExecution,
     PoolOutcome,
+    ProcessLaneBackend,
     SwapManager,
     WindowQueue,
     WorkerExecutor,
@@ -29,8 +33,10 @@ __all__ = [
     "lm_latency_model", "lm_profile", "load_dryrun_record",
     "costmodel_latency_model", "costmodel_profile", "costmodel_terms",
     "ExecutorBackend", "ProfiledBackend", "CompiledBackend", "CostModelBackend",
+    "SimulatedBackend",
     "ExecutionReport", "LMExecutor", "SwapManager", "WindowQueue",
     "WorkerExecutor", "ExecutorPool",
+    "LANE_NAMES", "PendingExecution", "ProcessLaneBackend",
     "BatchFailure", "PoolOutcome",
     "FaultSpec", "FaultPlan", "FaultInjector",
     "EdgeServer", "ServeStats",

@@ -52,6 +52,7 @@ __all__ = [
     "ProfiledBackend",
     "CompiledBackend",
     "CostModelBackend",
+    "SimulatedBackend",
 ]
 
 _STAGING_BW = 25e9  # host->device weight staging bandwidth (B/s)
@@ -164,6 +165,11 @@ class ExecutorBackend:
         residency and jit caches, exactly like a real per-worker
         device)."""
         return type(self)(self.variants, new_tokens=self.new_tokens)
+
+    def close(self) -> None:
+        """Release resources the substrate holds (default: nothing —
+        only substrates owning external resources, e.g. a process lane's
+        spawned worker, override this)."""
 
     def profile(self, model_name: str, recalls, name: str | None = None,
                 latency_floor_s: float = 0.0) -> ModelProfile:
@@ -441,6 +447,95 @@ class CompiledBackend(ExecutorBackend):
         if max_len is None:
             max_len = _bucket_seq(64, self.seq_multiple) + self.new_tokens
         return weight_bytes(cfg) + cache_bytes(cfg, b, max_len)
+
+
+class SimulatedBackend(ExecutorBackend):
+    """Deterministic no-model substrate built straight from scheduler
+    ``ModelProfile``s — no ``ModelConfig``, no device, no jit.
+
+    Reported seconds are ALWAYS the profile's modelled latency
+    (``latency_model`` affine, or flat ``latency_s``), so every run —
+    any lane strategy, sync or overlapped — sees bit-identical reports
+    and therefore makes bit-identical scheduling decisions.  What varies
+    is only how long the call really occupies its lane:
+
+    * ``occupancy="none"`` — return immediately (pure accounting).
+    * ``occupancy="sleep"`` — hold the lane for the modelled seconds
+      (× ``time_scale``) in ``time.sleep``, which releases the GIL: the
+      shape of a device-bound forward.  The lane benchmark's substrate.
+    * ``occupancy="spin"`` — busy-wait the same duration WITHOUT
+      releasing the GIL: the shape of host-bound Python work, the case
+      the process lane exists for.
+
+    Instances hold no unpicklable state, so they cross the process-lane
+    pipe as-is; predictions are a deterministic per-(rid, model) hash so
+    outputs match across lanes and processes.
+    """
+
+    provenance = "simulated"
+
+    OCCUPANCY = ("none", "sleep", "spin")
+
+    def __init__(self, profiles: Mapping[str, ModelProfile], new_tokens: int = 0,
+                 occupancy: str = "none", time_scale: float = 1.0):
+        if occupancy not in self.OCCUPANCY:
+            raise ValueError(f"unknown occupancy {occupancy!r}; "
+                             f"expected one of {self.OCCUPANCY}")
+        super().__init__({name: (prof, 0) for name, prof in dict(profiles).items()},
+                         new_tokens)
+        self.profiles = dict(profiles)
+        self.occupancy = occupancy
+        self.time_scale = float(time_scale)
+
+    def spawn(self) -> "SimulatedBackend":
+        """Fresh lane instance sharing profiles and occupancy mode."""
+        return SimulatedBackend(self.profiles, new_tokens=self.new_tokens,
+                                occupancy=self.occupancy, time_scale=self.time_scale)
+
+    def affine(self, model_name: str) -> tuple[float, float]:
+        """The profile's declared latency model (flat if it has none)."""
+        prof = self.profiles[model_name]
+        if prof.latency_model is not None:
+            return float(prof.latency_model[0]), float(prof.latency_model[1])
+        return float(prof.latency_s), 0.0
+
+    def model_bytes(self, model_name: str, batch: int | None = None,
+                    max_len: int | None = None) -> int:
+        """The profile's declared residency footprint."""
+        return int(self.profiles[model_name].memory_bytes)
+
+    def swap_cost(self, model_name: str) -> float:
+        """The profile's declared cold-load seconds."""
+        return float(self.profiles[model_name].load_latency_s)
+
+    def _occupy(self, seconds: float) -> None:
+        if seconds <= 0.0 or self.occupancy == "none":
+            return
+        if self.occupancy == "sleep":
+            time.sleep(seconds)
+            return
+        end = time.perf_counter() + seconds
+        while time.perf_counter() < end:
+            pass
+
+    def run_batch(self, model_name: str, prompts: np.ndarray, request_ids: list,
+                  class_token_ids: Optional[np.ndarray] = None) -> ExecutionReport:
+        """Occupy the lane per the occupancy mode, report the modelled
+        seconds, and emit deterministic per-request predictions."""
+        b = prompts.shape[0]
+        fixed, per_item = self.affine(model_name)
+        total = fixed + per_item * b
+        self._occupy(total * self.time_scale)
+        self._record(model_name, b, total)
+        n_classes = max(len(self.profiles[model_name].recalls), 1)
+        preds = [int((int(rid) * 1103515245 + len(model_name)) % n_classes)
+                 for rid in request_ids]
+        return ExecutionReport(
+            request_ids=list(request_ids), model=model_name, batch_size=b,
+            swap_s=0.0, prefill_s=total, decode_s=0.0,
+            tokens=np.zeros((b, 0), np.int32),
+            predictions=preds,
+        )
 
 
 class CostModelBackend(ExecutorBackend):

@@ -12,9 +12,10 @@ runs reduced configs; the same code path drives full configs on a pod
 from __future__ import annotations
 
 import dataclasses
+import multiprocessing
 import time
 from collections import OrderedDict
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Callable, Mapping, Optional, Sequence
 
@@ -34,7 +35,20 @@ __all__ = [
     "PoolOutcome",
     "WorkerExecutor",
     "ExecutorPool",
+    "LANE_NAMES",
+    "PendingExecution",
+    "ProcessLaneBackend",
 ]
+
+# Lane strategies the pool can run its per-worker shares under (see
+# ExecutorPool): "serial" executes lanes one after another in the calling
+# thread, "thread" (the default, bit-identical to the pre-lane pool) runs
+# one long-lived thread per lane, "process" keeps the lane threads for
+# coordination but forwards every batch forward to a spawned worker
+# process holding its own backend instance — host-side Python (padding,
+# fault polling, accounting) stays on the thread while the model forward
+# escapes the GIL entirely.
+LANE_NAMES = ("serial", "thread", "process")
 
 
 class WindowQueue:
@@ -148,6 +162,192 @@ class PoolOutcome:
         return {rid for f in self.failures for rid in f.request_ids}
 
 
+class _ImmediateFuture:
+    """Future-shaped wrapper around a call that already ran (serial lane)."""
+
+    def __init__(self, fn, args):
+        self._exc: BaseException | None = None
+        self._res = None
+        try:
+            self._res = fn(*args)
+        except BaseException as err:  # re-raised at result(), like a Future
+            self._exc = err
+
+    def result(self, timeout=None):
+        """The call's result; ``timeout`` is accepted but meaningless —
+        the work already ran at submit time."""
+        if self._exc is not None:
+            raise self._exc
+        return self._res
+
+
+class _ImmediateExecutor:
+    """Executor-shaped serial lane: ``submit`` runs the call inline, in
+    submission order, in the calling thread.  The deterministic baseline
+    the lane benchmark compares the concurrent strategies against (and
+    the right choice when the backend is not thread-safe)."""
+
+    def submit(self, fn, *args) -> _ImmediateFuture:
+        return _ImmediateFuture(fn, args)
+
+    def shutdown(self, wait=True):
+        """Nothing to tear down (no threads)."""
+
+
+def _lane_worker_main(conn) -> None:
+    """Entry point of one spawned lane worker process.
+
+    Protocol (host side is ``ProcessLaneBackend``): first message is
+    ``("init", backend)`` — the pickled (lazy, never-executed) backend
+    instance this process owns; then ``("run", model, prompts, rids,
+    class_token_ids)`` per batch, answered with ``("ok", prefill_s,
+    decode_s, tokens, predictions)`` or ``("err", repr)``; ``("stop",)``
+    ends the loop."""
+    backend = None
+    while True:
+        try:
+            msg = conn.recv()
+        except EOFError:
+            return
+        if msg[0] == "stop":
+            conn.close()
+            return
+        if msg[0] == "init":
+            backend = msg[1]
+            conn.send(("ok",))
+            continue
+        _, model_name, prompts, rids, class_token_ids = msg
+        try:
+            rep = backend.run_batch(model_name, prompts, rids, class_token_ids)
+            conn.send(("ok", rep.prefill_s, rep.decode_s, rep.tokens, rep.predictions))
+        except Exception as err:
+            conn.send(("err", repr(err)))
+
+
+class ProcessLaneBackend(ExecutorBackend):
+    """Backend proxy that forwards every forward pass to a dedicated
+    spawned worker process holding its own backend instance.
+
+    The process-lane half of ``ExecutorPool(lane="process")``: host-side
+    lane threads still coordinate (padding, fault polling, dispatch
+    marks), but the batch itself — the part that holds the device or, for
+    host-bound substrates, the GIL — runs in the worker process.  Work
+    ships as plain arrays (padded ``(B, S)`` int32 prompts + request
+    ids); reports come back as plain fields, so nothing jitted or
+    device-resident ever crosses the pipe.
+
+    ``template`` must be a FRESH (lazy, never-executed) backend — exactly
+    what ``spawn()`` returns — so it pickles cleanly into the child.  The
+    host keeps it for metadata (sizes, swap costs, provenance) and
+    records realized observations proxy-side for ``affine``.  The child
+    spawns lazily on first ``run_batch``; ``close()`` stops it.
+    """
+
+    def __init__(self, template: ExecutorBackend):
+        self.template = template
+        self.variants = dict(template.variants)
+        self.new_tokens = template.new_tokens
+        self.provenance = template.provenance
+        self._obs = {}
+        self._proc = None
+        self._conn = None
+
+    def _ensure(self) -> None:
+        if self._proc is not None:
+            return
+        ctx = multiprocessing.get_context("spawn")
+        self._conn, child = ctx.Pipe()
+        self._proc = ctx.Process(target=_lane_worker_main, args=(child,), daemon=True)
+        self._proc.start()
+        child.close()
+        self._conn.send(("init", self.template))
+        ack = self._conn.recv()
+        if ack[0] != "ok":  # pragma: no cover - init never computes
+            raise RuntimeError(f"lane worker failed to initialize: {ack!r}")
+
+    def run_batch(self, model_name: str, prompts: np.ndarray, request_ids: list,
+                  class_token_ids: Optional[np.ndarray] = None) -> ExecutionReport:
+        """Ship one padded batch to the worker process and rebuild the
+        report host-side.  Waiting on the pipe releases the GIL, so lane
+        threads block here in parallel while their processes compute."""
+        self._ensure()
+        self._conn.send(("run", model_name, np.ascontiguousarray(prompts),
+                         list(request_ids), class_token_ids))
+        reply = self._conn.recv()
+        if reply[0] != "ok":
+            raise RuntimeError(f"lane worker batch failed: {reply[1]}")
+        _, prefill_s, decode_s, tokens, predictions = reply
+        self._record(model_name, prompts.shape[0], prefill_s + decode_s)
+        return ExecutionReport(
+            request_ids=list(request_ids), model=model_name,
+            batch_size=prompts.shape[0], swap_s=0.0,
+            prefill_s=prefill_s, decode_s=decode_s,
+            tokens=tokens, predictions=predictions,
+        )
+
+    def affine(self, model_name: str):
+        """Proxy-side realized fit when batches have run, else the
+        template's estimate."""
+        if self._obs.get(model_name):
+            return super().affine(model_name)
+        return self.template.affine(model_name)
+
+    def model_bytes(self, model_name: str, batch: int | None = None,
+                    max_len: int | None = None) -> int:
+        """Residency footprint, from the template's metadata."""
+        return self.template.model_bytes(model_name, batch, max_len)
+
+    def swap_cost(self, model_name: str) -> float:
+        """Cold-load seconds, from the template's metadata."""
+        return self.template.swap_cost(model_name)
+
+    def spawn(self) -> "ProcessLaneBackend":
+        """A fresh proxy over a fresh template (its own child process)."""
+        return ProcessLaneBackend(self.template.spawn())
+
+    def close(self) -> None:
+        """Stop and join the worker process (idempotent)."""
+        if self._proc is None:
+            return
+        try:
+            self._conn.send(("stop",))
+        except (BrokenPipeError, OSError):
+            pass
+        self._conn.close()
+        self._proc.join(timeout=5.0)
+        if self._proc.is_alive():  # pragma: no cover - stuck child
+            self._proc.terminate()
+            self._proc.join(timeout=5.0)
+        self._proc = None
+        self._conn = None
+
+
+class PendingExecution:
+    """Handle to one window's in-flight lane execution
+    (``ExecutorPool.execute_async``).
+
+    ``result()`` joins the coordinator and returns the ``PoolOutcome``;
+    ``started_at``/``finished_at`` are ``time.perf_counter()`` stamps the
+    serving loop uses to measure how much scheduling wall time the
+    overlap actually hid."""
+
+    def __init__(self, future: Future, started_at: float):
+        self._future = future
+        self.started_at = started_at
+        self.finished_at: float | None = None
+
+    def done(self) -> bool:
+        """Whether the lanes have all finished (non-blocking)."""
+        return self._future.done()
+
+    def result(self) -> PoolOutcome:
+        """Join the in-flight execution (re-raises lane errors exactly
+        like the synchronous path)."""
+        outcome, finished = self._future.result()
+        self.finished_at = finished
+        return outcome
+
+
 class LMExecutor:
     """Executes scheduled batches through an ``ExecutorBackend``.
 
@@ -185,6 +385,10 @@ class LMExecutor:
         report = self.backend.run_batch(model_name, prompts, request_ids, class_token_ids)
         report.swap_s = swap_s
         return report
+
+    def close(self) -> None:
+        """Release backend resources (e.g. a process lane's worker)."""
+        self.backend.close()
 
     @staticmethod
     def _pad(batch: Sequence[ScheduleEntry],
@@ -377,16 +581,31 @@ class ExecutorPool:
 
     def __init__(self, workers: Sequence[Worker], variants: Mapping[str, tuple] | None = None,
                  capacity_bytes: int | None = None, new_tokens: int = 4,
-                 backend_factory: Callable[[], ExecutorBackend] | None = None):
+                 backend_factory: Callable[[], ExecutorBackend] | None = None,
+                 lane: str = "thread"):
         """``backend_factory`` (e.g. ``some_backend.spawn``) is called once
         per lane so every worker gets its own substrate instance — its own
         params, jit caches and residency, as a real per-worker device
         would.  Without it each lane builds the default
-        ``ProfiledBackend`` over ``variants``."""
+        ``ProfiledBackend`` over ``variants``.
+
+        ``lane`` picks the execution strategy per ``LANE_NAMES``:
+        ``"thread"`` (default, bit-identical to the pre-lane pool) runs
+        lanes on a long-lived thread pool, ``"serial"`` runs them one
+        after another in the calling thread, ``"process"`` wraps each
+        lane's backend in a ``ProcessLaneBackend`` so forwards run in
+        spawned worker processes, outside the GIL."""
         if not workers:
             raise ValueError("ExecutorPool requires at least one worker")
         if variants is None and backend_factory is None:
             raise ValueError("ExecutorPool needs variants=... or backend_factory=...")
+        if lane not in LANE_NAMES:
+            raise ValueError(f"unknown lane strategy {lane!r}; expected one of {LANE_NAMES}")
+        self.lane = lane
+        if lane == "process":
+            inner = backend_factory or (
+                lambda: ProfiledBackend(variants, new_tokens=new_tokens))
+            backend_factory = lambda: ProcessLaneBackend(inner())  # noqa: E731
         self.lanes: dict[int, WorkerExecutor] = {
             w.wid: WorkerExecutor(
                 w, variants, capacity_bytes, new_tokens,
@@ -397,11 +616,15 @@ class ExecutorPool:
         self.wall_s = 0.0  # wall-clock spent inside execute_schedule calls
         # One long-lived thread per lane: the serving loop closes a window
         # every ~100 ms, so spawn/join per window would be pure overhead.
-        self._tp: ThreadPoolExecutor | None = None
+        # (Serial lane: an executor-shaped shim that runs work at submit.)
+        self._tp: ThreadPoolExecutor | _ImmediateExecutor | None = None
+        # Single-thread coordinator for execute_async: runs the whole
+        # gather off the caller's thread so scheduling can overlap it.
+        self._coord: ThreadPoolExecutor | None = None
 
     @classmethod
-    def from_executor(cls, executor: LMExecutor,
-                      workers: Sequence[Worker]) -> "ExecutorPool":
+    def from_executor(cls, executor: LMExecutor, workers: Sequence[Worker],
+                      lane: str = "thread") -> "ExecutorPool":
         """Build a pool with one lane per worker from a single-executor
         config (same backend config / capacity / new_tokens, one
         ``backend.spawn()`` per lane); each lane still owns its
@@ -412,7 +635,31 @@ class ExecutorPool:
             capacity_bytes=executor.swaps.capacity,
             new_tokens=executor.new_tokens,
             backend_factory=executor.backend.spawn,
+            lane=lane,
         )
+
+    def close(self) -> None:
+        """Tear down the lane machinery: the coordinator and lane thread
+        pools shut down (waiting for in-flight work) and every lane's
+        backend is closed — which for process lanes stops the spawned
+        workers.  Idempotent; the pool can be rebuilt lazily afterward,
+        but the intended use is ``with ExecutorPool(...) as pool`` or an
+        explicit ``close()`` when serving ends."""
+        if self._coord is not None:
+            self._coord.shutdown(wait=True)
+            self._coord = None
+        if self._tp is not None:
+            self._tp.shutdown(wait=True)
+            self._tp = None
+        for lane in self.lanes.values():
+            lane.executor.close()
+
+    def __enter__(self) -> "ExecutorPool":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
     @property
     def swap_counts(self) -> dict[int, int]:
@@ -475,8 +722,48 @@ class ExecutorPool:
         if unknown:
             raise KeyError(f"schedule places work on unpooled workers {sorted(unknown)}")
         if self._tp is None:
-            self._tp = ThreadPoolExecutor(max_workers=len(self.lanes))
+            if self.lane == "serial":
+                self._tp = _ImmediateExecutor()
+            else:
+                self._tp = ThreadPoolExecutor(max_workers=len(self.lanes))
         return by_worker
+
+    def execute_async(
+        self,
+        schedule: Schedule,
+        prompt_fn: Callable[[Request], np.ndarray],
+        class_token_ids=None,
+        until: float | None = None,
+        on_dispatch: Callable[[list[int]], None] | None = None,
+        injector=None,
+        window: int = 0,
+        timeout_s: float | None = None,
+        supervised: bool = True,
+    ) -> PendingExecution:
+        """Start a window's lane execution WITHOUT joining it: the whole
+        gather (dispatch, lane join, ``wall_s`` accounting) runs on a
+        dedicated single-thread coordinator, and the returned
+        ``PendingExecution`` joins it later — this is what lets the
+        serving loop schedule window k+1 while window k's lanes run.
+
+        Semantics are identical to calling ``execute_supervised`` /
+        ``execute_schedule`` at the moment ``result()`` is awaited: same
+        lane split, same deterministic join order, same failure records;
+        unsupervised lane errors re-raise out of ``result()``.  One
+        execution may be in flight at a time (the coordinator has one
+        thread; a second call queues behind the first)."""
+        if self._coord is None:
+            self._coord = ThreadPoolExecutor(max_workers=1)
+        t0 = time.perf_counter()
+
+        def _run() -> tuple[PoolOutcome, float]:
+            outcome = self._gather(
+                schedule, prompt_fn, class_token_ids, until, on_dispatch,
+                injector, window, timeout_s, supervised,
+            )
+            return outcome, time.perf_counter()
+
+        return PendingExecution(self._coord.submit(_run), t0)
 
     def execute_supervised(
         self,
@@ -539,13 +826,16 @@ class ExecutorPool:
         by_worker = self._split(schedule)
         failures_by: dict[int, list[BatchFailure]] = {wid: [] for wid in by_worker}
         t0 = time.perf_counter()
+        # Ascending-wid submission keeps the serial lane's inline
+        # execution order deterministic; for the concurrent lanes the
+        # order is immaterial (the join below is already sorted).
         futures = {
             wid: self._tp.submit(
-                self.lanes[wid].execute, entries, prompt_fn,
+                self.lanes[wid].execute, by_worker[wid], prompt_fn,
                 class_token_ids, until, on_dispatch,
                 injector, window, failures_by[wid] if supervised else None,
             )
-            for wid, entries in by_worker.items()
+            for wid in sorted(by_worker)
         }
         reports: list[ExecutionReport] = []
         failures: list[BatchFailure] = []

@@ -73,6 +73,14 @@ class ServeStats:
     # realized}): which kind of estimate ``realized_over_profiled`` is
     # correcting for the variants this server schedules.
     profile_provenance: dict = dataclasses.field(default_factory=dict)
+    # Schedule/execute overlap accounting: host seconds spent in the
+    # decision phases (drain + schedule + commit), lane seconds spent
+    # executing dispatched windows, and — with ``overlap=True`` — the
+    # portion of decision time that ran hidden under the previous
+    # window's lane execution instead of serializing after it.
+    sched_wall_s: float = 0.0
+    exec_wall_s: float = 0.0
+    overlap_saved_s: float = 0.0
 
     @property
     def worker_utilization(self) -> dict:
@@ -114,6 +122,8 @@ class EdgeServer:
         retry_budget: int = 2,
         lane_timeout_s: float | None = None,
         backend=None,
+        overlap: bool = False,
+        lane: str = "thread",
     ):
         """``workers`` (a sequence of ``core.multiworker.Worker``) switches
         scheduling to §VII multi-worker placement; without it the policy
@@ -162,7 +172,21 @@ class EdgeServer:
         ``backend.model_bytes`` (weights + KV cache) instead of the
         asserted ``ModelProfile.memory_bytes`` constants.  Mutually
         exclusive with ``executor``; with neither passed (the default)
-        nothing changes."""
+        nothing changes.
+
+        ``overlap=True`` double-buffers the serving loop: while window
+        k's lanes execute asynchronously, the host drains and schedules
+        window k+1 against a snapshot of the committed timelines, then
+        reconciles at k+1's commit — window k's realized latencies,
+        health/quarantine changes, preemption withdrawals, and fault
+        retries all land first, and the speculative schedule is kept
+        only when none of them changed the scheduling inputs (otherwise
+        it is recomputed, yielding EXACTLY the synchronous decision).
+        ``overlap=False`` (the default) is bit-identical to the
+        synchronous loop.  ``lane`` selects the pool's execution
+        strategy (``serving.runtime.LANE_NAMES``) when this server
+        builds the pool; pass a pre-built ``ExecutorPool(lane=...)``
+        to control it directly."""
         self.apps = dict(apps)
         self.policy = policy
         if backend is not None:
@@ -189,13 +213,26 @@ class EdgeServer:
         self.num_workers = len(self.workers) if self.workers else 1
         self.pool = None
         if self.workers and executor is not None:
-            self.pool = (
-                executor
-                if isinstance(executor, ExecutorPool)
-                else ExecutorPool.from_executor(executor, self.workers)
-            )
+            if isinstance(executor, ExecutorPool):
+                if lane != "thread" and executor.lane != lane:
+                    raise ValueError(
+                        f"lane={lane!r} conflicts with the passed pool's "
+                        f"lane={executor.lane!r}; set it on the ExecutorPool")
+                self.pool = executor
+            else:
+                self.pool = ExecutorPool.from_executor(executor, self.workers, lane=lane)
         elif isinstance(executor, ExecutorPool):
             raise ValueError("ExecutorPool requires workers=[...] placement")
+        self.overlap = bool(overlap)
+        if self.overlap and (self.pool is None or self.prompt_fn is None):
+            raise ValueError(
+                "overlap=True requires workers=[...], an executor, and "
+                "prompt_fn=... (the overlapped loop dispatches windows to "
+                "ExecutorPool lanes asynchronously)")
+        # In-flight overlapped window: (PendingExecution, its schedule,
+        # its close time) — settled by _join_inflight before the next
+        # window's commit is finalized.
+        self._inflight = None
         self.retry_budget = int(retry_budget)
         self.lane_timeout_s = lane_timeout_s
         self.injector = None
@@ -265,10 +302,12 @@ class EdgeServer:
         """Enqueue one request for the window containing its arrival."""
         self.queue.submit(request)
 
-    def _preempt_window(self, now: float) -> None:
+    def _preempt_window(self, now: float) -> int:
         """Window-close preemption: withdraw committed-but-unstarted work
         from the streaming state, drop what already expired (recorded
-        violation, zero utility), re-admit the rest through the queue."""
+        violation, zero utility), re-admit the rest through the queue.
+        Returns the withdrawal count (the overlapped loop keeps its
+        speculative schedule only when this is zero)."""
         readmit, expired = self.state.preempt(now)
         self.stats.preempted += len(readmit) + len(expired)
         for r in expired:
@@ -278,6 +317,7 @@ class EdgeServer:
         self.stats.dropped += len(expired)
         if readmit:
             self.queue.readmit(readmit)
+        return len(readmit) + len(expired)
 
     def _set_record(self, rid: int, utility: float, violated: bool) -> None:
         """Insert or overwrite one per-request record, adjusting the
@@ -312,25 +352,11 @@ class EdgeServer:
         for e, u, miss in zip(sched.sorted_entries(), res.utilities, over):
             self._set_record(e.request.rid, float(u), bool(miss))
 
-    def run_window(self, now: float):
-        """Close the current window: (optionally) preempt, re-admit due
-        retries, schedule (drift-corrected, health-masked), commit, and
-        execute (supervised when the closed loop is on)."""
-        widx = self._window_index
-        self._window_index += 1
-        if self.preempt:
-            self._preempt_window(now)
-        if self._retry_ready:
-            # Backed-off retries whose ready time has arrived re-enter
-            # through the queue like preempted work.
-            due = [r for t, r in self._retry_ready if t <= now]
-            if due:
-                self._retry_ready = [(t, r) for t, r in self._retry_ready if t > now]
-                self.queue.readmit(sorted(due, key=lambda r: (r.arrival_s, r.rid)))
-        requests = self.queue.drain_window(now)
-        if not requests:
-            self._close_health_window()
-            return None
+    def _schedule_requests(self, requests, now: float, state):
+        """The decision phase both loop modes share: posterior attach /
+        pipeline ingest, then policy scheduling against ``state`` under
+        the current drift scales and quarantine mask.  Returns
+        ``(schedule, effective apps, evaluate's latency-scale fn)``."""
         from repro.core.sneakpeek import attach_sneakpeek
 
         lat_scale = mask = scale_fn = None
@@ -345,7 +371,7 @@ class EdgeServer:
             # skips re-admitted requests (evidence drawn once).
             self._pipeline.ingest(requests)
             sched = self._pipeline.schedule(
-                requests, now, state=self.state,
+                requests, now, state=state,
                 lat_scale=lat_scale, worker_mask=mask,
             )
             eff_apps = self._eff_apps
@@ -354,9 +380,15 @@ class EdgeServer:
                 attach_sneakpeek(requests, self.apps, self.sneakpeeks)
             sched, eff_apps = schedule_window(
                 self.policy, requests, self._eff_apps, now,
-                workers=self.workers, state=self.state,
+                workers=self.workers, state=state,
                 lat_scale=lat_scale, worker_mask=mask,
             )
+        return sched, eff_apps, scale_fn
+
+    def _commit_window(self, sched, eff_apps, now: float, scale_fn) -> object:
+        """Evaluate a scheduled window against the committed state and
+        fold the result into the aggregate stats (shared by both loop
+        modes; identical math)."""
         res = evaluate(
             sched, eff_apps, now, acc_mode="oracle", state=self.state,
             latency_scale=scale_fn,
@@ -372,6 +404,35 @@ class EdgeServer:
         self.stats.span_s = max(
             self.stats.span_s, max(tl.t for _, tl in self.state.items())
         )
+        return res
+
+    def run_window(self, now: float):
+        """Close the current window: (optionally) preempt, re-admit due
+        retries, schedule (drift-corrected, health-masked), commit, and
+        execute (supervised when the closed loop is on).  With
+        ``overlap=True`` execution is dispatched asynchronously and the
+        NEXT close schedules against a snapshot while it runs."""
+        if self.overlap:
+            return self._run_window_overlap(now)
+        widx = self._window_index
+        self._window_index += 1
+        t_host0 = time.perf_counter()
+        if self.preempt:
+            self._preempt_window(now)
+        if self._retry_ready:
+            # Backed-off retries whose ready time has arrived re-enter
+            # through the queue like preempted work.
+            due = [r for t, r in self._retry_ready if t <= now]
+            if due:
+                self._retry_ready = [(t, r) for t, r in self._retry_ready if t > now]
+                self.queue.readmit(sorted(due, key=lambda r: (r.arrival_s, r.rid)))
+        requests = self.queue.drain_window(now)
+        if not requests:
+            self._close_health_window()
+            return None
+        sched, eff_apps, scale_fn = self._schedule_requests(requests, now, self.state)
+        res = self._commit_window(sched, eff_apps, now, scale_fn)
+        self.stats.sched_wall_s += time.perf_counter() - t_host0
 
         reports = None
         outcome = None
@@ -391,7 +452,9 @@ class EdgeServer:
             self.stats.swaps = sum(self.pool.swap_counts.values())
             self.stats.worker_swaps = dict(self.pool.swap_counts)
             self.stats.pool_busy_s = dict(self.pool.busy_s)
-            self.stats.wall_s += time.perf_counter() - t1
+            dt = time.perf_counter() - t1
+            self.stats.wall_s += dt
+            self.stats.exec_wall_s += dt
             self._absorb_outcome(outcome, sched, now)
             reports = outcome.reports
         elif self.pool is not None and self.prompt_fn is not None:
@@ -410,14 +473,162 @@ class EdgeServer:
             self.stats.swaps = sum(self.pool.swap_counts.values())
             self.stats.worker_swaps = dict(self.pool.swap_counts)
             self.stats.pool_busy_s = dict(self.pool.busy_s)
-            self.stats.wall_s += time.perf_counter() - t1
+            dt = time.perf_counter() - t1
+            self.stats.wall_s += dt
+            self.stats.exec_wall_s += dt
         elif self.executor is not None and self.prompt_fn is not None:
             t1 = time.perf_counter()
             reports = self.executor.execute_schedule(sched, self.prompt_fn)
             self.stats.swaps = self.executor.swaps.swap_count
-            self.stats.wall_s += time.perf_counter() - t1
+            dt = time.perf_counter() - t1
+            self.stats.wall_s += dt
+            self.stats.exec_wall_s += dt
         self._close_health_window()
         return {"schedule": sched, "eval": res, "reports": reports, "outcome": outcome}
+
+    def _health_signature(self):
+        """Equality token over the health tracker's scheduler-facing
+        control state (quarantine mask + quantized drift scales); ``None``
+        when no tracker runs."""
+        if self.health is None:
+            return None
+        return self.health.control_signature(self.workers or [])
+
+    def _speculate(self, now: float):
+        """Drain the upcoming window and schedule it against a CLONE of
+        the committed timelines, while the previous window's lanes are
+        still executing.  Captures the scheduling-input signatures
+        (timelines + health control state) the reconcile step compares
+        against after the in-flight outcome lands.
+
+        Safe concurrently with lane execution: lanes only set dispatch
+        marks (never timelines), scheduling only peeks the clone, and
+        ``evaluate`` has not run — nothing commits here."""
+        requests = self.queue.drain_window(now)
+        if not requests:
+            return None
+        state_sig = self.state.signature()
+        health_sig = self._health_signature()
+        sched, eff_apps, _ = self._schedule_requests(requests, now, self.state.clone())
+        return {
+            "requests": requests, "sched": sched, "eff_apps": eff_apps,
+            "state_sig": state_sig, "health_sig": health_sig,
+        }
+
+    def _join_inflight(self) -> None:
+        """Settle the in-flight overlapped window exactly as the
+        synchronous loop would have at ITS close: join the lanes, update
+        pool stats, absorb the supervised outcome (drift observations,
+        failure withdrawals, retries — stamped with the in-flight
+        window's own close time, so retry backoffs match the synchronous
+        loop), and pay the owed health tick."""
+        if self._inflight is None:
+            return
+        pending, sched, now_k = self._inflight
+        self._inflight = None
+        outcome = pending.result()
+        self.stats.swaps = sum(self.pool.swap_counts.values())
+        self.stats.worker_swaps = dict(self.pool.swap_counts)
+        self.stats.pool_busy_s = dict(self.pool.busy_s)
+        dt = pending.finished_at - pending.started_at
+        self.stats.wall_s += dt
+        self.stats.exec_wall_s += dt
+        if self._closed_loop:
+            self._absorb_outcome(outcome, sched, now_k)
+        self._close_health_window()
+
+    def _run_window_overlap(self, now: float):
+        """One close of the double-buffered loop.
+
+        Phases: (1) SPECULATE — drain and schedule this window against a
+        snapshot while the previous window's lanes still run; (2) JOIN —
+        settle the in-flight outcome (realized latencies, withdrawals,
+        retries, health tick); (3) RECONCILE — keep the speculative
+        schedule only if nothing the join (or preemption) did changed
+        this window's scheduling inputs, otherwise re-admit the drained
+        requests and recompute, which reproduces the synchronous
+        decision exactly; (4) COMMIT + DISPATCH — evaluate against the
+        real state and hand the schedule to the lanes asynchronously."""
+        widx = self._window_index
+        self._window_index += 1
+        t_spec0 = time.perf_counter()
+        spec = self._speculate(now) if self._inflight is not None else None
+        t_spec1 = time.perf_counter()
+        pending_prev = self._inflight[0] if self._inflight is not None else None
+        self._join_inflight()
+        if pending_prev is not None and pending_prev.finished_at is not None:
+            # Decision time that ran while the lanes were still busy.
+            self.stats.overlap_saved_s += max(
+                0.0,
+                min(t_spec1, pending_prev.finished_at)
+                - max(t_spec0, pending_prev.started_at),
+            )
+        t_host0 = time.perf_counter()
+        withdrawn = self._preempt_window(now) if self.preempt else 0
+        due = []
+        if self._retry_ready:
+            due = [r for t, r in self._retry_ready if t <= now]
+            if due:
+                self._retry_ready = [(t, r) for t, r in self._retry_ready if t > now]
+                self.queue.readmit(sorted(due, key=lambda r: (r.arrival_s, r.rid)))
+        valid = (
+            spec is not None
+            and withdrawn == 0
+            and not due
+            and spec["health_sig"] == self._health_signature()
+            and spec["state_sig"] == self.state.signature()
+        )
+        if valid:
+            requests = spec["requests"]
+            sched, eff_apps = spec["sched"], spec["eff_apps"]
+            scale_fn = self.health.scale_fn() if self.health is not None else None
+        else:
+            if spec is not None:
+                # The speculative drain is rolled back through the queue;
+                # the re-drain below merges it with preempted/retried work
+                # under the same deterministic (arrival, rid) order.
+                self.queue.readmit(spec["requests"])
+            requests = self.queue.drain_window(now)
+            if not requests:
+                self._close_health_window()
+                self.stats.sched_wall_s += (t_spec1 - t_spec0) + (
+                    time.perf_counter() - t_host0)
+                return None
+            sched, eff_apps, scale_fn = self._schedule_requests(
+                requests, now, self.state)
+        res = self._commit_window(sched, eff_apps, now, scale_fn)
+        pending = self.pool.execute_async(
+            sched,
+            self.prompt_fn,
+            until=now + self.queue.window_s if self.preempt else None,
+            on_dispatch=self.state.mark_dispatched if self.preempt else None,
+            injector=self.injector if self._closed_loop else None,
+            window=widx,
+            timeout_s=self.lane_timeout_s if self._closed_loop else None,
+            supervised=self._closed_loop,
+        )
+        self._inflight = (pending, sched, now)
+        self.stats.sched_wall_s += (t_spec1 - t_spec0) + (
+            time.perf_counter() - t_host0)
+        return {"schedule": sched, "eval": res, "reports": None,
+                "outcome": None, "pending": pending}
+
+    def close(self) -> None:
+        """Shut down the execution plane: join any in-flight overlapped
+        window, then tear down the pool's lane machinery (threads,
+        spawned processes) and the single executor's backend."""
+        self._join_inflight()
+        if self.pool is not None:
+            self.pool.close()
+        if self.executor is not None and not isinstance(self.executor, ExecutorPool):
+            self.executor.close()
+
+    def __enter__(self) -> "EdgeServer":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
     def _close_health_window(self) -> None:
         """Tick the health tracker at window close: quarantine cooldowns
@@ -519,13 +730,21 @@ class EdgeServer:
             # (closed loop), and dispatches what now starts inside the
             # next window.  Retry budgets and the committed horizon are
             # finite, so this terminates; the cap is a safety net only.
-            while (
-                len(self.queue)
-                or self._retry_ready
-                or (self.preempt and self.state.undispatched_backlog())
-            ) and w < n_windows + 10_000:
+            # The overlapped loop joins its in-flight window FIRST: the
+            # condition reads retry and backlog state that only settles
+            # once the outcome is absorbed (a no-op when synchronous).
+            while w < n_windows + 10_000:
+                self._join_inflight()
+                if not (
+                    len(self.queue)
+                    or self._retry_ready
+                    or (self.preempt and self.state.undispatched_backlog())
+                ):
+                    break
                 w += 1
                 out = self.run_window(w * self.queue.window_s)
                 if out:
                     outs.append(out)
+        # Overlap: the final window may still be executing.
+        self._join_inflight()
         return outs, self.stats
