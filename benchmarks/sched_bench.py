@@ -46,6 +46,20 @@ MW-SneakPeek compiled placement with the health tracker's drift
 added schedule latency (fault tolerance must be ~free when no faults
 fire).
 
+``--shard`` adds the device-sharded scheduling section: for each forced
+host-device count in ``--shard-devices`` (default 1,2,4,8) a subprocess
+runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=D`` (the
+flag must precede the first jax import, hence the subprocess) and
+measures (a) the batched Eq. 13 utility-tile phase — the per-round
+(rows, batch, models) penalty/clip/mean/argmax tile the sharded selector
+computes per shard — at the full window's row count vs the per-shard
+block, and (b) the end-to-end ``ShardedWindowPipeline`` schedule wall
+with decision parity asserted against the single-device pipeline.  Gate:
+the tile phase must scale >= 1.6x at 4 devices on 4096-request windows.
+The e2e wall numbers are informational: forced host devices share this
+host's cores (``host_cores`` is recorded in the artifact), so per-shard
+TILE time — not wall-clock — is the scaling evidence.
+
 ``--executor`` adds an informational (ungated) section: one identical
 request stream served through the full EdgeServer loop under each of the
 three executor backends (``serving/backends.py`` — profiled, compiled,
@@ -552,6 +566,136 @@ def run_executor(n_requests=16, new_tokens=2):
     return rows
 
 
+def shard_child(num_devices: int, n: int, chunk: int) -> dict:
+    """One forced-device-count measurement (runs in a subprocess with
+    XLA_FLAGS already set — see ``run_shard``).  Returns the payload the
+    parent embeds as one shard row."""
+    import os
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    from repro.core.pipeline import WindowPipeline, _chunk_member_mean, _penalty_jnp
+    from repro.core.shard import ShardedWindowPipeline, pad_rows
+
+    assert jax.local_device_count() == num_devices, (
+        f"forced {num_devices} devices, jax sees {jax.local_device_count()}"
+    )
+
+    # (a) The batched Eq. 13 utility-tile phase — penalty, clip, product,
+    # scalar-order member mean, argmax over (rows, B, M) — timed at the
+    # full window's padded row count and at one shard's block.  This is
+    # the per-round work ``_sharded_select_program`` computes per shard;
+    # elementwise along rows, so the per-shard block is an exact 1/D cut.
+    B, M = 8, 4
+
+    @jax.jit
+    def tile_phase(tb, acc, mask, size, dl, pen, swap, lat):
+        comp = (tb + swap) + lat
+        gam = _penalty_jnp(pen[:, None, None], dl[:, :, None], comp[:, None, :])
+        tile = acc * (1.0 - jnp.clip(gam, 0.0, 1.0))
+        u = _chunk_member_mean(tile, mask, size)
+        return jnp.argmax(u, axis=1)
+
+    def time_tile(rows: int) -> float:
+        rng = np.random.default_rng(0)
+        with enable_x64():
+            args = (
+                jnp.float64(0.01),
+                jnp.asarray(rng.random((rows, B, M))),
+                jnp.asarray((rng.random((rows, B)) < 0.9).astype(float)),
+                jnp.asarray(rng.integers(1, B + 1, rows).astype(float)),
+                jnp.asarray(rng.random((rows, B)) + 0.05),
+                jnp.asarray(rng.integers(0, 3, rows)),
+                jnp.asarray(rng.random((rows, M)) * 0.01),
+                jnp.asarray(rng.random((rows, M)) * 0.05),
+            )
+            tile_phase(*args).block_until_ready()  # compile untimed
+            return time_call(
+                lambda: tile_phase(*args).block_until_ready(), min_time_s=0.5
+            )
+
+    n_pad = pad_rows(n, num_devices)
+    tile_full_s = time_tile(n_pad)
+    tile_shard_s = time_tile(n_pad // num_devices)
+
+    # (b) End-to-end sharded schedule (informational wall) + decision
+    # parity against the single-device pipeline on the same window.
+    reqs, apps, sneaks = build_window(n)
+    actual_n = len(reqs)
+    pol = make_policy("LO-EDF", pipeline=True, chunk=chunk)
+    base = WindowPipeline(apps, policy=pol)
+    shp = ShardedWindowPipeline(apps, policy=pol, shard=num_devices)
+
+    def sig(sched):
+        return [
+            (e.request.rid, e.model, e.order, e.batch_id, e.worker,
+             e.est_start_s, e.est_latency_s)
+            for e in sched.sorted_entries()
+        ]
+
+    sb = base.schedule(reqs, 0.1)  # compiles untimed
+    ss = shp.schedule(reqs, 0.1)
+    assert sig(sb) == sig(ss), f"sharded schedule diverged at D={num_devices}"
+    t_base = time_call(lambda: base.schedule(reqs, 0.1), min_time_s=0.5)
+    t_shard = time_call(lambda: shp.schedule(reqs, 0.1), min_time_s=0.5)
+    return {
+        "devices": num_devices,
+        "requests": actual_n,
+        "chunk": chunk,
+        "host_cores": os.cpu_count(),
+        "tile_rows_full": n_pad,
+        "tile_rows_shard": n_pad // num_devices,
+        "tile_full_s": tile_full_s,
+        "tile_shard_s": tile_shard_s,
+        "tile_phase_speedup": tile_full_s / tile_shard_s,
+        "e2e_base_s": t_base,
+        "e2e_shard_s": t_shard,
+        "parity": True,
+        "shard_stats": shp.last_shard_stats,
+    }
+
+
+def run_shard(device_counts, n, chunk):
+    """Device-sharded scheduling sweep: one subprocess per forced host
+    device count (XLA_FLAGS must be set before the first jax import, so
+    each count needs a fresh interpreter)."""
+    import os
+    import subprocess
+
+    rows = []
+    for d in device_counts:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        env["PYTHONPATH"] = str(ROOT / "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+        )
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.sched_bench",
+             "--shard-child", str(d), "--shard-n", str(n),
+             "--shard-chunk", str(chunk)],
+            capture_output=True, text=True, timeout=1200, env=env, cwd=ROOT,
+        )
+        if proc.returncode != 0:
+            print(proc.stdout)
+            print(proc.stderr, file=sys.stderr)
+            raise RuntimeError(f"shard child D={d} failed")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        rows.append(row)
+        print(
+            f"[n={row['requests']:5d}] shard D={d} tile"
+            f" {row['tile_full_s'] * 1e6:8.1f} us ->"
+            f" {row['tile_shard_s'] * 1e6:8.1f} us/shard"
+            f" ({row['tile_phase_speedup']:5.2f}x) | e2e base"
+            f" {row['e2e_base_s'] * 1e3:7.2f} ms | sharded"
+            f" {row['e2e_shard_s'] * 1e3:7.2f} ms | parity OK",
+            flush=True,
+        )
+    return rows
+
+
 def run_multiworker(sizes, worker_counts, min_time_s=0.2):
     """Eq. 15 placement throughput: scalar loop vs batched utility tiles."""
     rows = []
@@ -644,6 +788,17 @@ def main():
     ap.add_argument("--executor", action="store_true",
                     help="serve one stream through each executor backend "
                          "(window wall time + realized/profiled latency ratio)")
+    ap.add_argument("--shard", action="store_true",
+                    help="device-sharded scheduling sweep (one subprocess "
+                         "per forced host device count)")
+    ap.add_argument("--shard-devices", type=str, default="1,2,4,8")
+    ap.add_argument("--shard-n", type=int, default=4096,
+                    help="window size for the shard sweep (gate arms at "
+                         ">= 4096 requests x 4 devices)")
+    ap.add_argument("--shard-chunk", type=int, default=64,
+                    help="chunk composed with the sharded e2e cell")
+    ap.add_argument("--shard-child", type=int, default=0,
+                    help=argparse.SUPPRESS)  # internal: one forced-D child
     ap.add_argument("--pipeline-policies", type=str, default="LO-EDF,LO-Priority,SneakPeek")
     ap.add_argument(
         "--chunk", type=str, default="32,64",
@@ -655,6 +810,11 @@ def main():
         default=str(ROOT / "results" / "benchmarks" / "BENCH_sched.json"),
     )
     args = ap.parse_args()
+
+    if args.shard_child:
+        row = shard_child(args.shard_child, args.shard_n, args.shard_chunk)
+        print(json.dumps(row, default=float))
+        return
 
     sizes = (
         [int(s) for s in args.sizes.split(",") if s]
@@ -710,6 +870,12 @@ def main():
         else None
     )
     exec_rows = run_executor() if args.executor else []
+    shard_devices = [int(d) for d in args.shard_devices.split(",") if d]
+    shard_rows = (
+        run_shard(shard_devices, args.shard_n, args.shard_chunk)
+        if args.shard
+        else []
+    )
 
     gate = [
         r for r in rows
@@ -760,6 +926,14 @@ def main():
         "pipeline_chunked_results": chunk_rows,
         "pipeline_multiworker_results": mw_pipe_rows,
         "executor_results": exec_rows,
+        "shard_results": shard_rows,
+        "shard_note": (
+            "Forced host devices share this host's cores (host_cores per "
+            "row), so the scaling evidence is the per-shard batched "
+            "TILE-phase time (an exact 1/D row cut of elementwise work), "
+            "not e2e wall-clock; e2e rows are informational with decision "
+            "parity asserted."
+        ) if shard_rows else None,
         "sneakpeek_1024_speedup": gate[0]["speedup"] if gate else None,
         "multiworker_1024_speedup": mw_gate[0]["speedup"] if mw_gate else None,
         "pipeline_1024_speedup": (
@@ -851,6 +1025,18 @@ def main():
             f" conflict-rate {r['conflict_rate']:.3f}): {sp:.2f}x"
             f" (target >= 2x vs fast path) [{status}]"
         )
+    # Shard gate: the batched tile phase must scale >= 1.6x at 4 forced
+    # host devices on 4096-request windows (parity is asserted per cell
+    # inside the child).
+    for r in shard_rows:
+        if r["devices"] == 4 and r["requests"] >= 4000:
+            sp = r["tile_phase_speedup"]
+            status = "PASS" if sp >= 1.6 else "FAIL"
+            failed |= sp < 1.6
+            print(
+                f"Sharded tile phase @{r['requests']} x4 devices:"
+                f" {sp:.2f}x (target >= 1.6x) [{status}]"
+            )
     if health_row is not None:
         oh = health_row["overhead_pct"]
         status = "PASS" if oh < 5.0 else "FAIL"

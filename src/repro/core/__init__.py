@@ -40,6 +40,7 @@ from repro.core.scheduler import (
     make_policy,
     schedule_window,
 )
+from repro.core.shard import ShardedWindowPipeline
 from repro.core.simulator import Simulation, WindowResult, run_window
 from repro.core.sneakpeek import (
     ConfusionSneakPeek,
@@ -65,7 +66,7 @@ __all__ = [
     "HealthConfig", "HealthTracker", "WorkerHealth",
     "Worker", "multiworker_schedule",
     "WindowPipeline", "get_pipeline_backend", "pipeline_schedule",
-    "set_pipeline_backend",
+    "set_pipeline_backend", "ShardedWindowPipeline",
     "group_priority", "request_priorities", "request_priority",
     "POLICY_NAMES", "SchedulerPolicy", "effective_apps", "make_policy",
     "schedule_window",

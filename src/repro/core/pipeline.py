@@ -1191,8 +1191,12 @@ class WindowPipeline:
             _TABLES.pop(next(iter(_TABLES)))
         return ent
 
-    def _schedule_multiworker_jax(self, policy, requests, now, workers, state,
-                                  arrays, lat_scale=None):
+    def _mw_setup(self, policy, requests, now, workers, state, arrays,
+                  lat_scale=None):
+        """Host-side half of the Eq. 15 path: grouping, ordering, pool
+        encoding and the padded group tensors — everything up to (but not
+        including) the compiled placement scan, shared verbatim with the
+        sharded pipeline."""
         from repro.core.fastpath import PoolArrays
         from repro.core.grouping import group_by_app, split_groups_by_label
 
@@ -1245,31 +1249,22 @@ class WindowPipeline:
             # Scaled l(m, b) for this group, precomputed on the host so the
             # compiled completions match the numpy fast path bit-for-bit.
             lat_tab[gi] = tab["slat_fixed"][ai] + tab["slat_item"][ai] * b
+        return {
+            "wa": wa, "prio": prio, "member_idx": member_idx,
+            "ordered_groups": ordered_groups, "pool": pool, "tab": tab,
+            "acc": acc, "member_mask": member_mask, "deadlines": deadlines,
+            "bsizes": bsizes, "app_id": app_id, "lat_tab": lat_tab,
+        }
 
-        res_mode = pool.res_mode(state)
-        res0 = pool.res[:, 0].copy() if res_mode == "slot1" else pool.res
-        chunk = self._chunk_of(policy)
-        prog = _multiworker_program(res_mode, chunk)
-        with self._enable_x64():
-            out = prog(
-                pool.t, res0, pool.sizes, np.float64(pool.capacity),
-                acc, member_mask, deadlines, bsizes, app_id,
-                lat_tab, tab["sswap"], tab["gid"], tab["valid"], tab["pen"],
-                tab["pref"],
-            )
-        if chunk:
-            wsel, sel, starts, lats, stats = out
-            self._record_chunk_stats(chunk, n_groups, stats)
-        else:
-            wsel, sel, starts, lats = out
-        wsel = np.asarray(wsel)
-        sel = np.asarray(sel)
-        starts = np.asarray(starts)
-        lats = np.asarray(lats)
-
+    def _mw_emit(self, setup, workers, wsel, sel, starts, lats):
+        """Host-side emit of the Eq. 15 path: per-worker order counters +
+        the fast path's member ordering rule, from the scan's outputs."""
+        wa = setup["wa"]
+        prio = setup["prio"]
+        member_idx = setup["member_idx"]
         orders = {w.wid: 1 for w in workers}
         entries = []
-        for gi, (key, members) in enumerate(ordered_groups):
+        for gi, (key, members) in enumerate(setup["ordered_groups"]):
             aa = wa.app_arrays[members[0].app]
             idx = member_idx[key]
             w = workers[int(wsel[gi])]
@@ -1291,6 +1286,40 @@ class WindowPipeline:
         sched = Schedule(entries=entries)
         sched.validate()
         return sched
+
+    def _schedule_multiworker_jax(self, policy, requests, now, workers, state,
+                                  arrays, lat_scale=None):
+        setup = self._mw_setup(policy, requests, now, workers, state, arrays,
+                               lat_scale)
+        pool, tab = setup["pool"], setup["tab"]
+        n_groups = len(setup["ordered_groups"])
+        acc = setup["acc"]
+        member_mask = setup["member_mask"]
+        deadlines = setup["deadlines"]
+        bsizes = setup["bsizes"]
+        app_id = setup["app_id"]
+        lat_tab = setup["lat_tab"]
+
+        res_mode = pool.res_mode(state)
+        res0 = pool.res[:, 0].copy() if res_mode == "slot1" else pool.res
+        chunk = self._chunk_of(policy)
+        prog = _multiworker_program(res_mode, chunk)
+        with self._enable_x64():
+            out = prog(
+                pool.t, res0, pool.sizes, np.float64(pool.capacity),
+                acc, member_mask, deadlines, bsizes, app_id,
+                lat_tab, tab["sswap"], tab["gid"], tab["valid"], tab["pen"],
+                tab["pref"],
+            )
+        if chunk:
+            wsel, sel, starts, lats, stats = out
+            self._record_chunk_stats(chunk, n_groups, stats)
+        else:
+            wsel, sel, starts, lats = out
+        return self._mw_emit(
+            setup, workers, np.asarray(wsel), np.asarray(sel),
+            np.asarray(starts), np.asarray(lats),
+        )
 
     def _enable_x64(self):
         from jax.experimental import enable_x64
@@ -1374,7 +1403,11 @@ class WindowPipeline:
         sched.validate()
         return sched
 
-    def _schedule_grouped_jax(self, policy, requests, now, state, arrays):
+    def _grouped_setup(self, policy, requests, now, state, arrays):
+        """Host-side half of the grouped path: grouping, the brute-force
+        branch (returned as ``{"sched": ...}`` when it applies), ordering
+        and the padded group tensors + carry seed — shared verbatim with
+        the sharded pipeline."""
         from repro.core.bruteforce import brute_force_groups
         from repro.core.evaluation import WorkerTimeline
         from repro.core.grouping import group_by_app, split_groups_by_label
@@ -1401,9 +1434,10 @@ class WindowPipeline:
             else:
                 tl = WorkerTimeline(now)
             try:
-                return brute_force_groups(
+                sched = brute_force_groups(
                     groups, self.apps, now, acc_mode=acc_mode, arrays=wa, timeline=tl
                 )
+                return {"sched": sched}
             except ValueError:
                 pass  # too many candidates; fall through to the greedy scan
 
@@ -1444,26 +1478,25 @@ class WindowPipeline:
             valid_tab[gi, :m] = True
             pen_tab[gi] = _PENALTY_ID[aa.app.penalty]
 
-        t0, res0, gsizes, cap, res_mode = self._state_seed(wa, state, now)
-        chunk = self._chunk_of(policy)
-        prog = _grouped_program(res_mode, chunk)
-        with self._enable_x64():
-            out = prog(
-                t0, res0, gsizes, cap, acc, member_mask, deadlines, sizes,
-                lat_tab, swap_tab, gid_tab, valid_tab, pen_tab,
-            )
-        if chunk:
-            sel, starts, lats, stats = out
-            self._record_chunk_stats(chunk, n_groups, stats)
-        else:
-            sel, starts, lats = out
-        sel = np.asarray(sel)
-        starts = np.asarray(starts)
-        lats = np.asarray(lats)
+        seed = self._state_seed(wa, state, now)
+        return {
+            "sched": None, "wa": wa, "prio": prio, "member_idx": member_idx,
+            "ordered_groups": ordered_groups, "prefs": prefs, "seed": seed,
+            "acc": acc, "member_mask": member_mask, "deadlines": deadlines,
+            "sizes": sizes, "lat_tab": lat_tab, "swap_tab": swap_tab,
+            "gid_tab": gid_tab, "valid_tab": valid_tab, "pen_tab": pen_tab,
+        }
 
+    def _grouped_emit(self, setup, sel, starts, lats):
+        """Host-side emit of the grouped path (single global order
+        counter, model names through the tie-pref permutation)."""
+        wa = setup["wa"]
+        prio = setup["prio"]
+        member_idx = setup["member_idx"]
+        prefs = setup["prefs"]
         entries = []
         order = 1
-        for gi, (key, members) in enumerate(ordered_groups):
+        for gi, (key, members) in enumerate(setup["ordered_groups"]):
             aa = wa.app_arrays[members[0].app]
             idx = member_idx[key]
             model = aa.names[int(prefs[gi][int(sel[gi])])]
@@ -1484,6 +1517,30 @@ class WindowPipeline:
         sched.validate()
         return sched
 
+    def _schedule_grouped_jax(self, policy, requests, now, state, arrays):
+        setup = self._grouped_setup(policy, requests, now, state, arrays)
+        if setup.get("sched") is not None:  # brute-force branch (<= tau)
+            return setup["sched"]
+        t0, res0, gsizes, cap, res_mode = setup["seed"]
+        n_groups = len(setup["ordered_groups"])
+        chunk = self._chunk_of(policy)
+        prog = _grouped_program(res_mode, chunk)
+        with self._enable_x64():
+            out = prog(
+                t0, res0, gsizes, cap, setup["acc"], setup["member_mask"],
+                setup["deadlines"], setup["sizes"], setup["lat_tab"],
+                setup["swap_tab"], setup["gid_tab"], setup["valid_tab"],
+                setup["pen_tab"],
+            )
+        if chunk:
+            sel, starts, lats, stats = out
+            self._record_chunk_stats(chunk, n_groups, stats)
+        else:
+            sel, starts, lats = out
+        return self._grouped_emit(
+            setup, np.asarray(sel), np.asarray(starts), np.asarray(lats)
+        )
+
 
 def pipeline_schedule(
     policy,
@@ -1497,15 +1554,28 @@ def pipeline_schedule(
     lat_scale=None,
     worker_mask=None,
     chunk: int | None = None,
+    shard=None,
 ) -> Schedule:
     """One pipelined window pass for ``SchedulerPolicy.schedule`` /
     ``schedule_window`` (``workers`` selects the Eq. 15 placement
     program; ``lat_scale``/``worker_mask`` the closed-loop drift
     corrections and health masking — multi-worker only; ``chunk``
-    overrides the policy's speculative chunked selection knob)."""
-    return WindowPipeline(
-        apps, policy=policy, backend=backend, workers=workers, chunk=chunk
-    ).schedule(
+    overrides the policy's speculative chunked selection knob; ``shard``
+    (or the policy's ``shard`` field) routes through the device-sharded
+    ``core.shard.ShardedWindowPipeline`` — bit-identical decisions)."""
+    shard = shard if shard is not None else getattr(policy, "shard", False)
+    if shard:
+        from repro.core.shard import ShardedWindowPipeline
+
+        pipe = ShardedWindowPipeline(
+            apps, policy=policy, backend=backend, workers=workers, chunk=chunk,
+            shard=shard,
+        )
+    else:
+        pipe = WindowPipeline(
+            apps, policy=policy, backend=backend, workers=workers, chunk=chunk
+        )
+    return pipe.schedule(
         requests, now, state=state, arrays=arrays,
         lat_scale=lat_scale, worker_mask=worker_mask,
     )

@@ -58,6 +58,12 @@ class SchedulerPolicy:
     # (``make_policy(name, pipeline=True, chunk=16)``).  0 keeps the
     # sequential scan; ignored off the jax pipeline backend.
     chunk: int = 0
+    # Device-sharded window scheduling (repro.core.shard): True splits
+    # the batched utility tiles across every local device, an int pins
+    # the shard count (``make_policy(name, shard=True)``).  Implies the
+    # pipeline route; decisions stay bit-identical to the single-device
+    # scan (one shard delegates to the plain pipeline verbatim).
+    shard: bool | int = False
 
     def schedule(
         self,
@@ -72,7 +78,7 @@ class SchedulerPolicy:
         clone, never committed); ``arrays`` is an optional precomputed
         ``fastpath.WindowArrays`` (fast path only)."""
         t0 = time.perf_counter()
-        if self.pipeline:
+        if self.pipeline or self.shard:
             from repro.core.pipeline import pipeline_schedule
 
             sched = pipeline_schedule(
@@ -244,7 +250,7 @@ def schedule_window(
         attach_sneakpeek(requests, apps, sneakpeeks)
     eff_apps = effective_apps(apps, sneakpeeks, short_circuit)
     if workers:
-        if policy.pipeline:
+        if policy.pipeline or policy.shard:
             from repro.core.pipeline import pipeline_schedule
 
             sched = pipeline_schedule(

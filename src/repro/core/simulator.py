@@ -93,6 +93,11 @@ class Simulation:
         (speculate-K/validate/fallback rounds — bit-identical decisions);
         ``None`` defers to the policy's ``chunk`` field, 0 forces the
         sequential scan.
+      shard: device-sharded window scheduling (``core.shard``) — True
+        splits the batched utility tiles across every local device, an
+        int pins the shard count; implies ``pipeline`` and composes with
+        ``chunk``.  Decisions stay bit-identical to the single-device
+        pipeline.
     """
 
     def __init__(
@@ -110,6 +115,7 @@ class Simulation:
         prebatch_backend: str = "numpy",
         pipeline: bool = False,
         chunk: int | None = None,
+        shard=False,
     ):
         self.policy = policy
         self.apps = dict(apps)
@@ -133,7 +139,14 @@ class Simulation:
         # Application objects would also defeat AppArrays memoization).
         self._eff_apps = effective_apps(self.apps, sneakpeeks, short_circuit)
         self._pipeline = None
-        if pipeline:
+        if shard:
+            from repro.core.shard import ShardedWindowPipeline
+
+            self._pipeline = ShardedWindowPipeline(
+                self._eff_apps, policy=policy, workers=self.workers, chunk=chunk,
+                shard=shard,
+            )
+        elif pipeline:
             from repro.core.pipeline import WindowPipeline
 
             self._pipeline = WindowPipeline(

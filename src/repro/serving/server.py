@@ -116,6 +116,7 @@ class EdgeServer:
         memory_capacity_bytes: int | None = None,
         pipeline: bool = False,
         chunk: int | None = None,
+        shard=False,
         preempt: bool = False,
         faults=None,
         health=False,
@@ -136,6 +137,10 @@ class EdgeServer:
         the compiled selectors).  ``chunk`` sizes the pipeline's
         speculative chunked selection (bit-identical decisions; ``None``
         defers to the policy's ``chunk`` field, 0 = sequential scan).
+        ``shard`` routes windows through the device-sharded
+        ``core.shard.ShardedWindowPipeline`` (True = every local device,
+        int = pinned count; implies ``pipeline`` and composes with
+        ``chunk``/``overlap`` — decisions stay bit-identical).
 
         ``executor`` may be a single ``LMExecutor`` or an
         ``ExecutorPool``; with ``workers`` set, a single executor is
@@ -290,7 +295,14 @@ class EdgeServer:
                 for name in exec_backend.variants
             })
         self._pipeline = None
-        if pipeline:
+        if shard:
+            from repro.core.shard import ShardedWindowPipeline
+
+            self._pipeline = ShardedWindowPipeline(
+                self._eff_apps, sneakpeeks=sneakpeeks, policy=policy,
+                workers=self.workers, chunk=chunk, shard=shard,
+            )
+        elif pipeline:
             from repro.core.pipeline import WindowPipeline
 
             self._pipeline = WindowPipeline(

@@ -1,0 +1,176 @@
+"""Scheduler-facing sharding infrastructure (`core.shard` over
+`launch.mesh` + `distributed.sharding`): mesh construction at odd device
+counts, decision-table spec round-trips, and the one-device regression
+that ``shard=True`` compiles NOTHING new — it must delegate to the exact
+cached single-device programs, byte-identical decisions included."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import WindowPipeline, make_policy
+from repro.core.pipeline import _PROGRAMS
+from repro.core.shard import ShardedWindowPipeline, pad_rows, row_specs, shard_mesh
+from repro.core.sneakpeek import attach_sneakpeek
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+REPO = Path(__file__).resolve().parents[1]
+DEVICES = jax.local_device_count()
+
+
+class _FakeMesh:
+    """Just enough Mesh for row_specs/spec_for_axes (shape lookups)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+# ----------------------------------------------------------------- meshes
+
+
+def test_shard_mesh_single_device():
+    mesh = shard_mesh(1)
+    assert mesh.axis_names == ("shard",)
+    assert mesh.shape["shard"] == 1
+    # cached per count: the scheduler reuses one mesh across windows
+    assert shard_mesh(1) is mesh
+
+
+@pytest.mark.skipif(
+    DEVICES < 3,
+    reason="odd-count mesh needs >= 3 forced host devices "
+    "(CI shard-tests leg forces 4)",
+)
+def test_shard_mesh_odd_count():
+    mesh = shard_mesh(3)
+    assert mesh.shape["shard"] == 3
+    assert len(mesh.devices.ravel()) == 3
+
+
+def test_make_mesh_odd_counts_subprocess():
+    """launch.make_mesh at odd/prime counts (3, 5, 7) as the scheduler
+    uses it — forced host devices, XLA_FLAGS before jax import."""
+    code = textwrap.dedent(
+        """
+        import os, sys, json
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=7"
+        sys.path.insert(0, %r)
+        from repro.launch.mesh import make_mesh
+        from repro.core.shard import shard_mesh
+        out = {}
+        for n in (3, 5, 7):
+            m = make_mesh((n,), ("shard",))
+            out[str(n)] = [dict(m.shape)["shard"], len(m.devices.ravel())]
+            sm = shard_mesh(n)
+            out[str(n)].append(dict(sm.shape)["shard"])
+        print(json.dumps(out))
+        """
+        % str(REPO / "src")
+    )
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=420,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out == {"3": [3, 3, 3], "5": [5, 5, 5], "7": [7, 7, 7]}
+
+
+# ------------------------------------------------------------ spec routing
+
+
+def test_row_specs_shard_first_dim():
+    mesh = _FakeMesh({"shard": 4})
+    specs = row_specs(mesh, {"acc": (8, 5, 3), "dl": (8,), "t0": ()})
+    assert specs["acc"] == P("shard")
+    assert specs["dl"] == P("shard")
+    assert specs["t0"] == P()  # scalars replicate
+
+
+def test_row_specs_axis_override():
+    """Worker-axis tables shard dim 1 (lat_tab is (A, W, M))."""
+    mesh = _FakeMesh({"shard": 4})
+    specs = row_specs(mesh, {"lat": (3, 8, 6)}, axis={"lat": 1})
+    assert specs["lat"] == P(None, "shard")
+
+
+def test_row_specs_indivisible_replicates():
+    """The divisibility rule falls back to replication — the scheduler
+    must pad first (pad_rows) so blocks always divide."""
+    mesh = _FakeMesh({"shard": 4})
+    specs = row_specs(mesh, {"dl": (7,)})
+    assert specs["dl"] == P()
+    padded = pad_rows(7, 4)
+    assert padded % 4 == 0
+    assert row_specs(mesh, {"dl": (padded,)})["dl"] == P("shard")
+
+
+def test_row_specs_round_trip_placement():
+    """Specs produced by row_specs place real arrays with the expected
+    per-device block shapes on a real 1-D mesh."""
+    import numpy as np
+
+    from repro.distributed.sharding import named_sharding_tree
+
+    n = DEVICES
+    mesh = shard_mesh(n)
+    rows = pad_rows(10, n)
+    specs = row_specs(mesh, {"acc": (rows, 5, 3)})
+    ns = named_sharding_tree(specs, mesh)
+    arr = jax.device_put(np.zeros((rows, 5, 3)), ns["acc"])
+    shards = arr.addressable_shards
+    assert len(shards) == n
+    assert all(s.data.shape == (rows // n, 5, 3) for s in shards)
+
+
+# --------------------------------------------- one-device delegation regression
+
+
+def test_shard_one_device_no_new_programs():
+    """shard=1 (or numpy backend) must DELEGATE: identical decisions to
+    the plain pipeline AND zero new compiled-program cache keys — the
+    single-device path never pays a shard_map compile."""
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs = make_requests(list(APP_SPECS.values()), per_app=5, seed=4)
+    attach_sneakpeek(reqs, apps, sneaks)
+
+    def sig(s):
+        return [
+            (e.request.rid, e.model, e.order, e.batch_id, e.worker,
+             e.est_start_s, e.est_latency_s)
+            for e in s.sorted_entries()
+        ]
+
+    for name in ("LO-EDF", "SneakPeek", "MaxAcc-EDF"):
+        pol = make_policy(name, pipeline=True)
+        base = WindowPipeline(apps, policy=pol)
+        b = base.schedule(reqs, 0.1)
+        before = set(_PROGRAMS)
+        shp = ShardedWindowPipeline(apps, policy=pol, shard=1)
+        s = shp.schedule(reqs, 0.1)
+        after = set(_PROGRAMS)
+        assert sig(b) == sig(s)
+        assert after == before, f"shard=1 compiled {sorted(after - before)}"
+        assert shp.last_shard_stats is None  # stats only when actually sharded
+
+
+def test_shard_program_cache_keys_namespaced():
+    """Sharded programs (when they DO compile) live under shard-prefixed
+    keys so they never collide with the single-device cache."""
+    for key in _PROGRAMS:
+        kind = key[0] if isinstance(key, tuple) else key
+        assert isinstance(kind, str)
+    shard_kinds = {"shard_select", "shard_mw", "shard_mw_spec", "shard_accorder"}
+    base_kinds = {
+        k[0] for k in _PROGRAMS if isinstance(k, tuple)
+    } - shard_kinds
+    assert not any(k.startswith("shard_") for k in base_kinds)

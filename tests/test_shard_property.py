@@ -1,0 +1,405 @@
+"""Device-sharded window scheduling: bit-identity across the shard axis.
+
+``ShardedWindowPipeline`` (``core.shard``) must reproduce the single-device
+compiled pipeline decision-for-decision — same selections, orderings,
+start times, latencies AND speculation counters — across shard counts,
+all five policies, chunked composition, carried streaming state,
+heterogeneous multi-worker pools, and non-divisible request counts
+(padding rows/workers must never win an argmax).
+
+Two harness layers:
+
+  * In-process tests shard up to ``jax.local_device_count()`` — with one
+    device they skip with an explicit reason (the CI ``shard-tests`` leg
+    forces 4 host devices via XLA_FLAGS so they run on every PR).  The
+    hypothesis property suite (requirements-dev.txt) randomizes window
+    shape x shard count x policy x theta coverage in-process.
+  * A subprocess matrix forces {2, 4, 8} host devices regardless of the
+    parent's device count (XLA_FLAGS must precede the first jax import),
+    so multi-shard parity is exercised even under plain tier-1.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+try:  # optional dev dependency (requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; example tests still run
+    from _hypothesis_stub import given, settings, st
+
+import jax
+
+from repro.core import (
+    POLICY_NAMES,
+    StreamingState,
+    WindowPipeline,
+    Worker,
+    evaluate,
+    make_policy,
+)
+from repro.core.scheduler import schedule_window
+from repro.core.shard import ShardedWindowPipeline, pad_rows, resolve_num_shards
+from repro.core.sneakpeek import attach_sneakpeek
+from repro.data.applications import APP_SPECS, build_benchmark_suite, make_requests
+
+REPO = Path(__file__).resolve().parents[1]
+DEVICES = jax.local_device_count()
+multi_device = pytest.mark.skipif(
+    DEVICES < 2,
+    reason="needs >= 2 forced host devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4 before jax "
+    "import; the CI shard-tests leg sets it)",
+)
+
+
+def _window(per_app=6, seed=0, theta="all", deadline_std_s=0.05):
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs = make_requests(
+        list(APP_SPECS.values()), per_app=per_app,
+        deadline_std_s=deadline_std_s, seed=seed,
+    )
+    if theta != "none":
+        attach_sneakpeek(reqs, apps, sneaks)
+        if theta == "some":
+            for r in reqs[::3]:
+                r.theta = None
+                r.evidence = None
+    return reqs, apps, sneaks
+
+
+def _sig(sched):
+    return [
+        (e.request.rid, e.model, e.order, e.batch_id, e.worker,
+         round(e.est_start_s, 12), round(e.est_latency_s, 12))
+        for e in sched.sorted_entries()
+    ]
+
+
+def _assert_parity(reqs, apps, policy_name, shards, chunk=0, sneaks=None,
+                   workers=None, state_pair=None, now=0.1):
+    """Full decision-tuple + speculation-counter identity between the
+    sharded and single-device pipelines on one window."""
+    pol = make_policy(policy_name, pipeline=True, chunk=chunk)
+    base = WindowPipeline(apps, sneakpeeks=sneaks, policy=pol, workers=workers)
+    shp = ShardedWindowPipeline(
+        apps, sneakpeeks=sneaks, policy=pol, workers=workers, shard=shards
+    )
+    sb, ss = state_pair if state_pair else (None, None)
+    b = base.schedule(reqs, now, state=sb)
+    s = shp.schedule(reqs, now, state=ss)
+    assert _sig(b) == _sig(s), (
+        f"{policy_name} shards={shards} chunk={chunk} diverged"
+    )
+    # The speculate/validate rounds must be the SAME rounds: identical
+    # conflict counters, not merely identical final decisions.
+    assert b.chunk_stats == s.chunk_stats
+    return b, s, shp
+
+
+# ------------------------------------------------------ in-process parity
+
+
+@multi_device
+@pytest.mark.parametrize("name", list(POLICY_NAMES))
+@pytest.mark.parametrize("chunk", [0, 4])
+def test_parity_all_policies(name, chunk):
+    shards = min(4, DEVICES)
+    # 7 per app: total not divisible by 2/4/8 -> padding rows exercised.
+    reqs, apps, sneaks = _window(per_app=7, seed=1)
+    _assert_parity(reqs, apps, name, shards, chunk=chunk)
+
+
+@multi_device
+@pytest.mark.parametrize("name", ["SneakPeek", "LO-EDF", "MaxAcc-EDF"])
+def test_parity_carried_state(name):
+    shards = min(4, DEVICES)
+    reqs, apps, _ = _window(per_app=6, seed=3)
+    reqs2, _, _ = _window(per_app=6, seed=9)
+    sigs = {}
+    for mode in ("base", "shard"):
+        cls = WindowPipeline if mode == "base" else ShardedWindowPipeline
+        kw = {} if mode == "base" else {"shard": shards}
+        pipe = cls(apps, policy=make_policy(name, pipeline=True), **kw)
+        state = StreamingState(num_workers=1, now=0.0)
+        s1 = pipe.schedule(reqs, 0.1, state=state)
+        evaluate(s1, apps, 0.1, state=state)
+        s2 = pipe.schedule(reqs2, 0.35, state=state)
+        sigs[mode] = (_sig(s1), _sig(s2))
+    assert sigs["base"] == sigs["shard"]
+
+
+@multi_device
+@pytest.mark.parametrize("name", list(POLICY_NAMES))
+@pytest.mark.parametrize("chunk", [0, 3])
+def test_parity_multiworker_pool(name, chunk):
+    """Heterogeneous pool through schedule_window — the Eq. 15 tiles
+    shard the WORKER axis (3 workers on up to 4 shards: padded workers
+    must never win a placement)."""
+    shards = min(4, DEVICES)
+    pool = [Worker(0, speed=1.0), Worker(1, speed=1.7), Worker(2, speed=0.6)]
+    reqs, apps, sneaks = _window(per_app=5, seed=11)
+    pb = make_policy(name, pipeline=True, chunk=chunk)
+    ps = make_policy(name, shard=shards, chunk=chunk)
+    sb, _ = schedule_window(pb, list(reqs), apps, 0.1, sneakpeeks=sneaks,
+                            workers=pool)
+    ss, _ = schedule_window(ps, list(reqs), apps, 0.1, sneakpeeks=sneaks,
+                            workers=pool)
+    assert _sig(sb) == _sig(ss)
+    assert sb.chunk_stats == ss.chunk_stats
+
+
+@multi_device
+def test_parity_grouped_greedy_scan():
+    """Force the grouped GREEDY path (tau=0 disables brute force) so the
+    group-axis sharded driver is exercised, not just SneakPeek's
+    label-split windows."""
+    shards = min(4, DEVICES)
+    reqs, apps, _ = _window(per_app=6, seed=5)
+    pol = make_policy("Grouped", pipeline=True, tau=0)
+    base = WindowPipeline(apps, policy=pol)
+    shp = ShardedWindowPipeline(apps, policy=pol, shard=shards)
+    assert _sig(base.schedule(reqs, 0.1)) == _sig(shp.schedule(reqs, 0.1))
+    assert shp.last_shard_stats["num_shards"] == shards
+
+
+@multi_device
+def test_padding_rows_never_win():
+    """Tiny windows (fewer rows than shards after grouping) are pure
+    padding stress: every decision must still match, and every emitted
+    entry must reference a real request."""
+    shards = min(4, DEVICES)
+    apps, sneaks = build_benchmark_suite(backend="numpy", seed=0)
+    reqs = make_requests(list(APP_SPECS.values()), per_app=1, seed=2)
+    attach_sneakpeek(reqs, apps, sneaks)
+    for name in ("LO-EDF", "SneakPeek", "MaxAcc-EDF"):
+        b, s, _ = _assert_parity(reqs, apps, name, shards)
+        assert len(s.sorted_entries()) == len(reqs)
+        rids = {r.rid for r in reqs}
+        assert all(e.request.rid in rids for e in s.sorted_entries())
+
+
+@multi_device
+def test_simulation_shard_flag_end_to_end():
+    """Simulation(shard=...) wires the sharded pipeline end-to-end:
+    realized aggregate metrics match Simulation(pipeline=True) exactly
+    (same decisions -> same utilities/violations/accuracy)."""
+    from repro.core import Simulation
+
+    shards = min(4, DEVICES)
+    _, apps, sneaks = _window(per_app=4)
+    metrics = []
+    for kw in ({"pipeline": True}, {"shard": shards}):
+        sim = Simulation(
+            make_policy("SneakPeek", pipeline=True), apps,
+            sneakpeeks=sneaks, seed=7, **kw,
+        )
+        reqs = make_requests(list(APP_SPECS.values()), per_app=4, seed=7)
+        metrics.append(sim.run(reqs))
+    assert metrics[0] == metrics[1]
+
+
+# ------------------------------------------------------ hypothesis suite
+
+
+@multi_device
+@settings(max_examples=25, deadline=None)
+@given(
+    per_app=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**16),
+    shards=st.integers(min_value=1, max_value=8),
+    policy=st.sampled_from(list(POLICY_NAMES)),
+    chunk=st.sampled_from([0, 1, 3, 999]),
+    theta=st.sampled_from(["all", "some", "none"]),
+    tight=st.booleans(),
+)
+def test_property_sharded_bit_identity(per_app, seed, shards, policy, chunk,
+                                       theta, tight):
+    """Random window x shard count x policy x chunk x theta coverage:
+    full per-request decision-tuple identity, single worker."""
+    shards = min(shards, DEVICES)
+    reqs, apps, _ = _window(
+        per_app=per_app, seed=seed, theta=theta,
+        deadline_std_s=0.01 if tight else 0.05,
+    )
+    _assert_parity(reqs, apps, policy, shards, chunk=chunk)
+
+
+@multi_device
+@settings(max_examples=10, deadline=None)
+@given(
+    per_app=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**16),
+    shards=st.integers(min_value=2, max_value=8),
+    policy=st.sampled_from(list(POLICY_NAMES)),
+    nw=st.integers(min_value=1, max_value=5),
+)
+def test_property_sharded_multiworker(per_app, seed, shards, policy, nw):
+    """Random heterogeneous pools: worker-axis sharding (including more
+    shards than workers) keeps Eq. 15 placement bit-identical."""
+    shards = min(shards, DEVICES)
+    pool = [
+        Worker(i, speed=1.0 + 0.35 * (i % 3), load_scale=1.0 + 0.2 * (i % 2))
+        for i in range(nw)
+    ]
+    reqs, apps, sneaks = _window(per_app=per_app, seed=seed)
+    pb = make_policy(policy, pipeline=True)
+    ps = make_policy(policy, shard=shards)
+    sb, _ = schedule_window(pb, list(reqs), apps, 0.1, sneakpeeks=sneaks,
+                            workers=pool)
+    ss, _ = schedule_window(ps, list(reqs), apps, 0.1, sneakpeeks=sneaks,
+                            workers=pool)
+    assert _sig(sb) == _sig(ss)
+
+
+# ----------------------------------------------------- overlap composition
+
+
+@multi_device
+@pytest.mark.parametrize("chunk,preempt", [(0, False), (4, False), (4, True)])
+def test_shard_composes_with_overlap_serving(chunk, preempt):
+    """shard=K composes with the overlapped async server (and chunked
+    speculation, and preemption): EdgeServer(overlap=True, shard=K)
+    serves the exact decisions of EdgeServer(overlap=True,
+    pipeline=True) on a deterministic trace."""
+    from repro.core import Application, ModelProfile, Request
+    from repro.serving import EdgeServer, LMExecutor, SimulatedBackend
+
+    shards = min(4, DEVICES)
+    profiles = {
+        "small": ModelProfile("small", recalls=[0.74, 0.72],
+                              latency_s=0.010, load_latency_s=0.02),
+        "big": ModelProfile("big", recalls=[0.93, 0.91],
+                            latency_s=0.045, load_latency_s=0.08),
+    }
+    app = Application(name="lm", models=list(profiles.values()),
+                      penalty="sigmoid")
+    trace = [Request(rid=i, app="lm", arrival_s=0.02 * i,
+                     deadline_s=0.02 * i + 0.3, true_label=i % 2)
+             for i in range(18)]
+
+    def prompt_fn(req):
+        return (np.arange(8, dtype=np.int32) + int(req.rid)) % 256
+
+    runs = []
+    for kw in ({"pipeline": True}, {"shard": shards}):
+        backend = SimulatedBackend(profiles, occupancy="none")
+        with EdgeServer(
+            {"lm": app}, make_policy("LO-EDF"),
+            executor=LMExecutor(backend=backend), prompt_fn=prompt_fn,
+            workers=[Worker(0), Worker(1)], overlap=True, chunk=chunk,
+            preempt=preempt, **kw,
+        ) as srv:
+            outs, stats = srv.run(list(trace))
+        runs.append((
+            [(e.request.rid, e.model, e.worker, e.order, e.batch_id)
+             for o in outs for e in o["schedule"].sorted_entries()],
+            stats.requests, stats.violations, round(stats.mean_utility, 12),
+        ))
+    assert runs[0] == runs[1]
+
+
+# ------------------------------------------------- subprocess device matrix
+
+
+_CHILD = textwrap.dedent(
+    """
+    import os, sys, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
+    sys.path.insert(0, %r)
+    sys.path.insert(0, %r)
+    import test_shard_property as tsp
+
+    ndev = %d
+    fails = []
+    reqs, apps, sneaks = tsp._window(per_app=5, seed=1)
+    for name in tsp.POLICY_NAMES:
+        for chunk in (0, 3):
+            try:
+                tsp._assert_parity(reqs, apps, name, ndev, chunk=chunk)
+            except AssertionError as e:
+                fails.append(f"single {name} chunk={chunk}: {e}")
+    pool = [tsp.Worker(0, speed=1.0), tsp.Worker(1, speed=1.7),
+            tsp.Worker(2, speed=0.6)]
+    for name in ("SneakPeek", "LO-EDF"):
+        pb = tsp.make_policy(name, pipeline=True, chunk=3)
+        ps = tsp.make_policy(name, shard=ndev, chunk=3)
+        sb, _ = tsp.schedule_window(pb, list(reqs), apps, 0.1,
+                                    sneakpeeks=sneaks, workers=pool)
+        ss, _ = tsp.schedule_window(ps, list(reqs), apps, 0.1,
+                                    sneakpeeks=sneaks, workers=pool)
+        if tsp._sig(sb) != tsp._sig(ss) or sb.chunk_stats != ss.chunk_stats:
+            fails.append(f"mw {name}")
+    print(json.dumps({"devices": ndev, "fails": fails}))
+    """
+)
+
+
+@pytest.mark.parametrize(
+    "ndev", [2, pytest.param(4, marks=pytest.mark.slow),
+             pytest.param(8, marks=pytest.mark.slow)]
+)
+def test_sharded_parity_subprocess(ndev):
+    """Forced {2, 4, 8}-device parity regardless of the parent's device
+    count (XLA_FLAGS must precede the first jax import)."""
+    code = _CHILD % (ndev, str(REPO / "src"), str(REPO / "tests"), ndev)
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=560,
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["devices"] == ndev
+    assert out["fails"] == [], out["fails"]
+
+
+# ----------------------------------------------------------- flag plumbing
+
+
+def test_resolve_num_shards_and_pad_rows():
+    assert resolve_num_shards(False) == 1
+    assert resolve_num_shards(0) == 1
+    assert resolve_num_shards(1) == 1
+    assert resolve_num_shards(True) == DEVICES
+    with pytest.raises(ValueError):
+        resolve_num_shards(DEVICES + 1)
+    with pytest.raises(ValueError):
+        resolve_num_shards(-2)
+    assert pad_rows(7, 4) == 8
+    assert pad_rows(8, 4) == 8
+    assert pad_rows(0, 4) == 4  # >= one row per shard
+    assert pad_rows(5, 1) == 5
+    with pytest.raises(ValueError):
+        pad_rows(3, 0)
+
+
+def test_shard_policy_field_routes_pipeline():
+    """make_policy(name, shard=...) routes through the pipeline even
+    without pipeline=True, on any device count (1 device delegates)."""
+    reqs, apps, _ = _window(per_app=3)
+    pol = make_policy("LO-EDF", shard=1)
+    base = make_policy("LO-EDF", pipeline=True)
+    assert _sig(pol.schedule(reqs, apps, 0.1)) == _sig(
+        base.schedule(reqs, apps, 0.1)
+    )
+
+
+def test_numpy_backend_resolves_one_shard():
+    _, apps, _ = _window(per_app=2)
+    shp = ShardedWindowPipeline(
+        apps, policy=make_policy("LO-EDF", pipeline=True),
+        backend="numpy", shard=True,
+    )
+    assert shp.num_shards() == 1
+    reqs = make_requests(list(APP_SPECS.values()), per_app=2, seed=0)
+    base = WindowPipeline(
+        apps, policy=make_policy("LO-EDF", pipeline=True), backend="numpy"
+    )
+    assert _sig(shp.schedule(reqs, 0.1)) == _sig(base.schedule(reqs, 0.1))
